@@ -1,0 +1,40 @@
+"""Shared benchmark plumbing: timing, CSV emission, result caching."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+os.makedirs(ART, exist_ok=True)
+
+_ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """One CSV row: ``name,us_per_call,derived``."""
+    _ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def rows():
+    return list(_ROWS)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def save_json(name: str, data):
+    path = os.path.join(ART, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+    return path
+
+
+def geomean(xs):
+    import numpy as np
+    xs = np.asarray(list(xs), dtype=float)
+    return float(np.exp(np.log(np.maximum(xs, 1e-12)).mean()))

@@ -1,0 +1,54 @@
+"""Fig. 13 reproduction: ablation of the co-design features.
+
+Paper claims: partition-only optimization gives a relatively small
+speedup; adding diagonal links unlocks most of the gain (bypassing
+collection congestion + flattening memory-latency non-uniformity);
+pipelining adds further latency gains on top.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EvalOptions, Evaluator, make_hw, optimize
+from repro.core.ga import GAConfig, run_ga
+from repro.graphs import WORKLOADS
+
+from .common import emit, save_json, timed
+
+GA_CFG = GAConfig(generations=60, population=64)
+
+
+def main(fast: bool = False):
+    results = {}
+    wnames = ("alexnet", "hydranet") if fast else ("alexnet", "vit",
+                                                   "hydranet")
+    for wname in wnames:
+        task = WORKLOADS[wname](batch=1)
+        hw_plain = make_hw("A", 4, "hbm")
+        hw_diag = make_hw("A", 4, "hbm", diagonal_links=True)
+        base = optimize(task, hw_plain, "baseline").baseline.latency
+        opts = EvalOptions(redistribution=True, async_exec=True)
+
+        # 1) partitioning only (no diagonal links)
+        ga1, us1 = timed(run_ga, task, hw_plain, "latency", opts, GA_CFG)
+        # 2) + diagonal links
+        ga2, us2 = timed(run_ga, task, hw_diag, "latency", opts, GA_CFG)
+        # 3) + pipelining (batch 4)
+        ev = Evaluator(task, hw_diag, opts)
+        res = ev.evaluate(ga2.partition, ga2.redist_mask)
+        from repro.core.pipelining import pipeline_batch
+        pipe = pipeline_batch(res.segments(), 4)
+        part_sp = base / ga1.objective
+        diag_sp = base / ga2.objective
+        pipe_sp = base / (pipe.pipelined / 4)
+
+        results[wname] = {"partition": part_sp, "diag": diag_sp,
+                          "pipe": pipe_sp}
+        emit(f"fig13/{wname}/partition_only", us1, f"{part_sp:.3f}x")
+        emit(f"fig13/{wname}/plus_diagonal", us2, f"{diag_sp:.3f}x")
+        emit(f"fig13/{wname}/plus_pipelining", 0.0, f"{pipe_sp:.3f}x")
+    save_json("fig13", results)
+
+
+if __name__ == "__main__":
+    main()

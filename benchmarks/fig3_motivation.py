@@ -1,0 +1,39 @@
+"""Fig. 3 reproduction: DRAM vs HBM congestion and memory placement on a
+4×4 mesh (flow-level simulator standing in for ASTRA-sim)."""
+from __future__ import annotations
+
+from repro.core.netsim import fig3_case
+
+from .common import emit, save_json, timed
+
+GB = 1e9
+
+
+def main():
+    results = {}
+    for mem in ("dram", "hbm"):
+        for place in ("peripheral", "central"):
+            for bw in (60 * GB, 120 * GB):
+                out, us = timed(fig3_case, mem, place, bw_nop=bw)
+                key = f"{mem}_{place}_nop{int(bw/GB)}"
+                results[key] = out["latency"]
+                emit(f"fig3/{key}", us,
+                     f"latency_ms={out['latency']*1e3:.2f}")
+    # headline claims
+    nop_scale = results["hbm_peripheral_nop60"] / \
+        results["hbm_peripheral_nop120"]
+    dram_scale = results["dram_peripheral_nop60"] / \
+        results["dram_peripheral_nop120"]
+    placement = results["hbm_peripheral_nop60"] / \
+        results["hbm_central_nop60"]
+    emit("fig3/hbm_nop_scaling", 0.0,
+         f"{nop_scale:.2f}x (paper: linear, 2.00x)")
+    emit("fig3/dram_nop_scaling", 0.0,
+         f"{dram_scale:.2f}x (paper: none, 1.00x)")
+    emit("fig3/central_vs_peripheral", 0.0,
+         f"{placement:.2f}x (paper: 1.53x)")
+    save_json("fig3", results)
+
+
+if __name__ == "__main__":
+    main()

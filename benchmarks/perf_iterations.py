@@ -1,0 +1,284 @@
+"""§Perf hillclimbing harness: hypothesis → change → re-lower → measure.
+
+Each iteration names a hypothesis, applies a change through the
+``lower_cell``/``calibrate_cell`` knobs (sharding-rule overrides,
+accumulation, config fields), recompiles the cell, and records the three
+roofline terms before/after. Results append to
+``benchmarks/artifacts/perf_log.json`` and are summarized in
+EXPERIMENTS.md §Perf.
+
+Run (512 virtual devices):
+    PYTHONPATH=src python -m benchmarks.perf_iterations --cell smollm
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.dryrun import calibrate_cell, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import (HBM_BW, LINK_BW, PEAK_FLOPS,
+                                     analytic_hbm_bytes, model_flops_for)
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+LOG = os.path.join(ART, "perf_log.json")
+
+
+def measure(arch, shape, mesh, **knobs):
+    """Compile + calibrate one variant; return terms + memory."""
+    lowered, _ = lower_cell(arch, shape, mesh, **knobs)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cal = calibrate_cell(arch, shape, mesh, **knobs)
+    coll = sum(cal["collective_bytes_per_device"].values())
+    mf = model_flops_for(arch, shape)
+    terms = {
+        "compute_s": cal["flops_per_device"] / PEAK_FLOPS,
+        "memory_s": analytic_hbm_bytes(arch, shape) / HBM_BW,
+        "collective_s": coll / LINK_BW,
+        "temp_gib": mem.temp_size_in_bytes / 2**30,
+        "args_gib": mem.argument_size_in_bytes / 2**30,
+    }
+    bound = max(terms["compute_s"], terms["memory_s"],
+                terms["collective_s"])
+    terms["bound_s"] = bound
+    terms["roofline_frac"] = mf / bound / (mesh.size * PEAK_FLOPS)
+    terms["dominant"] = max(
+        ("compute_s", "memory_s", "collective_s"),
+        key=lambda k: terms[k]).split("_")[0]
+    return terms
+
+
+def log_iteration(cell, name, hypothesis, before, after, verdict):
+    entries = []
+    if os.path.exists(LOG):
+        entries = json.load(open(LOG))
+    entries.append({"cell": cell, "name": name, "hypothesis": hypothesis,
+                    "before": before, "after": after, "verdict": verdict})
+    json.dump(entries, open(LOG, "w"), indent=1)
+    d = before["dominant"] + "_s"
+    print(f"[perf] {cell} :: {name}")
+    print(f"       hypothesis: {hypothesis}")
+    print(f"       dominant({before['dominant']}): "
+          f"{before[d]*1e3:.1f} -> {after[d]*1e3:.1f} ms | "
+          f"bound {before['bound_s']*1e3:.1f} -> "
+          f"{after['bound_s']*1e3:.1f} ms | roofline "
+          f"{before['roofline_frac']*100:.2f}% -> "
+          f"{after['roofline_frac']*100:.2f}% | {verdict}")
+
+
+def fmt(t):
+    return (f"comp={t['compute_s']*1e3:.1f}ms mem={t['memory_s']*1e3:.1f}ms "
+            f"coll={t['collective_s']*1e3:.1f}ms temp={t['temp_gib']:.1f}GiB "
+            f"roofline={t['roofline_frac']*100:.2f}%")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="smollm | internlm2 | deepseek (the three chosen "
+                         "hillclimb cells)")
+    args = ap.parse_args()
+    mesh = make_production_mesh()
+    dp = ("data",)
+    del dp
+
+    if args.cell == "smollm":
+        run_smollm(mesh)
+    elif args.cell == "internlm2":
+        run_internlm2(mesh)
+    elif args.cell == "internlm2_sp":
+        run_internlm2_sp(mesh)
+    elif args.cell == "internlm2_nozr":
+        run_internlm2_nozr(mesh)
+    elif args.cell == "deepseek":
+        run_deepseek(mesh)
+    elif args.cell == "gemma2_decode":
+        run_gemma2_decode(mesh)
+    elif args.cell == "minicpm3":
+        run_minicpm3(mesh)
+    else:
+        raise SystemExit("unknown cell")
+
+
+def run_smollm(mesh):
+    """Worst roofline fraction: heads (15) indivisible by model=16 ⇒
+    attention replicates across the model axis."""
+    cell = ("smollm-360m", "train_4k")
+    base = measure(*cell, mesh)
+    print("baseline:", fmt(base))
+
+    # It.1: shard the query-chunk dim of blockwise attention over model.
+    h1 = ("attention compute is replicated 16x because 15 heads don't "
+          "divide the model axis; sharding the 512-long query-chunk dim "
+          "over model recovers ~16x attention parallelism at the cost of "
+          "one out-chunk all-gather per q block (napkin: attention is "
+          "~14/15 of layer FLOPs here -> expect ~10x compute-term drop)")
+    after = measure(*cell, mesh,
+                    extra_rules={"attn_qchunk": P(("data",), "model",
+                                                  None, None, None)})
+    verdict = ("confirmed" if after["compute_s"] < base["compute_s"] * 0.5
+               else "refuted")
+    log_iteration("smollm-360m/train_4k", "seq-chunk-sharded attention",
+                  h1, base, after, verdict)
+    best = after if after["bound_s"] < base["bound_s"] else base
+    best_knobs = ({"extra_rules": {"attn_qchunk": P(("data",), "model",
+                                                    None, None, None)}}
+                  if best is after else {})
+
+    # It.2: residual sharding off (trade collective for memory headroom).
+    h2 = ("residual-stream sharding (ZeRO-R) inserts per-layer "
+          "all-gathers; smollm has memory headroom, so dropping it should "
+          "cut the collective term with bounded temp growth")
+    after2 = measure(*cell, mesh, shard_residual=False, **best_knobs)
+    verdict = ("confirmed" if after2["collective_s"]
+               < best["collective_s"] else "refuted")
+    log_iteration("smollm-360m/train_4k", "residual sharding off", h2,
+                  best, after2, verdict)
+
+
+def run_internlm2(mesh):
+    """Most collective-bound dense trainer."""
+    cell = ("internlm2-20b", "train_4k")
+    base = measure(*cell, mesh)
+    print("baseline:", fmt(base))
+
+    # It.1: accum 2 -> 1 (halve FSDP param re-gathers).
+    h1 = ("every microbatch re-gathers the FSDP-sharded params; accum 2 "
+          "doubles gather traffic. accum=1 halves the all-gather bytes "
+          "(collective term ~ -40%) but roughly doubles activation temp "
+          "(9.2 -> ~17 GiB, over budget) — expect confirmed on "
+          "collectives, rejected on memory fit")
+    a1 = measure(*cell, mesh, accum=1)
+    verdict = ("confirmed" if a1["collective_s"] < base["collective_s"]
+               * 0.75 else "refuted")
+    verdict += "; fits" if a1["temp_gib"] + a1["args_gib"] <= 16 else \
+        "; does NOT fit 16GiB"
+    log_iteration("internlm2-20b/train_4k", "accum 2->1", h1, base, a1,
+                  verdict)
+
+    # It.2: accum 1 + smaller attn chunks to claw back activation memory.
+    h2 = ("keep accum=1 gather savings; shrink attention q-chunk 512->256 "
+          "to reduce the per-layer transient so the cell fits 16 GiB")
+    a2 = measure(*cell, mesh, accum=1, cfg_overrides={"attn_chunk": 256})
+    fits = a2["temp_gib"] + a2["args_gib"] <= 16
+    verdict = ("confirmed" if fits and a2["collective_s"]
+               < base["collective_s"] * 0.75 else "refuted")
+    log_iteration("internlm2-20b/train_4k", "accum1 + attn_chunk 256",
+                  h2, base, a2, verdict)
+
+
+def run_internlm2_sp(mesh):
+    """Beyond-paper iteration: Megatron-SP-style sequence sharding of the
+    residual stream instead of d_model (ZeRO-R) sharding."""
+    cell = ("internlm2-20b", "train_4k")
+    base = measure(*cell, mesh)
+    print("baseline:", fmt(base))
+    h = ("the d_model-sharded residual (ZeRO-R) pays all-gathers on top "
+         "of the TP partial-sum all-reduces; sharding the residual over "
+         "SEQUENCE instead converts AR(2Z)+AG/RS(2Z) per block into "
+         "AG(Z)+RS(Z) (Megatron-SP) — napkin: ~50% collective-term cut at "
+         "equal memory")
+    after = measure(*cell, mesh, shard_residual=False,
+                    extra_rules={"act_btd": P(("data",), "model", None)})
+    verdict = ("confirmed" if after["collective_s"]
+               < base["collective_s"] * 0.75 else "refuted")
+    log_iteration("internlm2-20b/train_4k", "sequence-parallel residual",
+                  h, base, after, verdict)
+
+
+def run_internlm2_nozr(mesh):
+    """Iteration 4: drop ZeRO-R residual sharding entirely (keep TP ARs),
+    paying the memory back with accum=4."""
+    cell = ("internlm2-20b", "train_4k")
+    base = measure(*cell, mesh)
+    print("baseline:", fmt(base))
+    h = ("after it.1–3: collectives are invariant to accum and naive "
+         "seq-sharding backfires (GSPMD re-gathers the sequence per "
+         "layer); the remaining removable component is the ZeRO-R "
+         "residual AG/RS itself — turn shard_residual off and recover "
+         "the activation memory with accum=4 (microbatch 4x smaller). "
+         "Napkin: residual AG/RS ≈ 2 x (tokens x D) x layers x microbats "
+         "of the 2.0 TB total → expect ~30-45% collective-term cut")
+    a = measure(*cell, mesh, shard_residual=False, accum=4)
+    fits = a["temp_gib"] + a["args_gib"] <= 16
+    verdict = ("confirmed" if a["collective_s"] < base["collective_s"]
+               * 0.75 and fits else
+               ("partially confirmed" if a["collective_s"]
+                < base["collective_s"] else "refuted"))
+    verdict += "; fits" if fits else "; does NOT fit"
+    log_iteration("internlm2-20b/train_4k", "no ZeRO-R + accum 4", h,
+                  base, a, verdict)
+
+
+def run_gemma2_decode(mesh):
+    """Most representative of the paper (communication optimization for
+    edge inference): decode is dominated by per-token parameter
+    re-gathers under FSDP."""
+    cell = ("gemma2-2b", "decode_32k")
+    base = measure(*cell, mesh)
+    print("baseline:", fmt(base))
+    h1 = ("FSDP re-gathers the full 2.6B-param model over ICI on every "
+          "decoded token (~0.3 GiB/token/device of all-gather) while the "
+          "HBM read of locally-replicated weights would cost only ~2 ms; "
+          "serving with params replicated along the data axis (TP-only "
+          "sharding) should collapse the collective term to attention-"
+          "reduce noise and make decode memory-bound, its natural regime")
+    a1 = measure(*cell, mesh, serve_fsdp=())
+    verdict = ("confirmed" if a1["collective_s"]
+               < base["collective_s"] * 0.3
+               and a1["dominant"] == "memory" else
+               ("partially confirmed" if a1["collective_s"]
+                < base["collective_s"] else "refuted"))
+    log_iteration("gemma2-2b/decode_32k", "replicated-params serving",
+                  h1, base, a1, verdict)
+
+
+def run_minicpm3(mesh):
+    """Worst roofline fraction: MLA with 40 heads (indivisible by 16) —
+    replicated latent-attention compute + gathers."""
+    cell = ("minicpm3-4b", "prefill_32k")
+    base = measure(*cell, mesh)
+    print("baseline:", fmt(base))
+    h1 = ("40 q-heads don't divide the 16-way model axis, so MLA latent "
+          "attention replicates; sharding the query-chunk dim over model "
+          "(attn_qchunk) restores 16x attention parallelism")
+    a1 = measure(*cell, mesh,
+                 extra_rules={"attn_qchunk": P(("data",), "model",
+                                               None, None, None)})
+    verdict = ("confirmed" if a1["compute_s"] < base["compute_s"] * 0.5
+               else "refuted")
+    log_iteration("minicpm3-4b/prefill_32k", "seq-chunk-sharded MLA",
+                  h1, base, a1, verdict)
+
+
+def run_deepseek(mesh):
+    """Most representative of the paper's technique (MoE dispatch = the
+    forced-sync grouped-GEMM boundary; DESIGN.md §4) and also the worst
+    memory cell."""
+    cell = ("deepseek-v2-236b", "train_4k")
+    base = measure(*cell, mesh)
+    print("baseline:", fmt(base))
+
+    # It.1: accum 8 -> 4 (fewer expert-weight re-gathers) at bf16 accum.
+    h2 = ("expert weights dominate gather traffic and are re-gathered "
+          "once per microbatch; accum 8->4 halves that collective term "
+          "if activations still fit (they dominated at accum<=4 before "
+          "the MoE fixes; expect ~2x collective improvement, temp "
+          "+~2GiB)")
+    a2 = measure(*cell, mesh, accum=4)
+    verdict = ("confirmed" if a2["collective_s"] < base["collective_s"]
+               * 0.65 else "refuted")
+    verdict += "; fits" if a2["temp_gib"] + a2["args_gib"] <= 16 else \
+        "; does NOT fit single-pod 16GiB"
+    log_iteration("deepseek-v2-236b/train_4k", "accum 8->4", h2, base,
+                  a2, verdict)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Roofline benchmark: the three-term table for every dry-run cell
+(EXPERIMENTS.md §Roofline), from the compiled artifacts."""
+from __future__ import annotations
+
+import os
+
+from repro.roofline import analyze_record, load_records
+from repro.roofline.analysis import format_table
+
+from .common import ART, emit, save_json
+
+
+def main(mesh: str = "single_pod_16x16"):
+    recs = load_records(os.path.join(ART, "dryrun"), mesh)
+    if not recs:
+        emit("roofline/no_artifacts", 0.0,
+             "run `python -m repro.launch.dryrun --all --calibrate` first")
+        return
+    terms = [analyze_record(r) for r in recs]
+    print(format_table(terms))
+    table = {}
+    for t in terms:
+        key = f"{t.arch}/{t.shape}"
+        table[key] = {
+            "compute_s": t.compute_s,
+            "memory_s": t.memory_s,
+            "collective_s": t.collective_s,
+            "dominant": t.dominant,
+            "useful_ratio": t.useful_ratio,
+            "roofline_fraction": t.roofline_fraction,
+        }
+        emit(f"roofline/{key}", t.bound_time * 1e6,
+             f"dominant={t.dominant} roofline="
+             f"{t.roofline_fraction*100:.1f}% useful={t.useful_ratio:.2f}")
+    save_json(f"roofline_{mesh}", table)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Run every benchmark (one per paper table/figure + the roofline table).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # full (slow)
+    PYTHONPATH=src python -m benchmarks.run --fast     # reduced sweep
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full workload sweep (~60+ min); default is the "
+                         "bounded profile — the full-sweep outputs are "
+                         "archived in benchmarks/artifacts/")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset (fig3,fig8,fig9_10,"
+                         "fig11,fig12,fig13,roofline)")
+    args = ap.parse_args()
+
+    args.fast = not args.full
+    from . import (fig3_motivation, fig8_latency_hbm, fig9_10_scaling,
+                   fig11_pipelining, fig12_lowbw, fig13_ablation, roofline)
+
+    benches = {
+        "fig3": lambda: fig3_motivation.main(),
+        "fig8": lambda: fig8_latency_hbm.main(fast=args.fast),
+        "fig9_10": lambda: fig9_10_scaling.main(fast=args.fast),
+        "fig11": lambda: fig11_pipelining.main(fast=args.fast),
+        "fig12": lambda: fig12_lowbw.main(fast=args.fast),
+        "fig13": lambda: fig13_ablation.main(fast=args.fast),
+        "roofline": lambda: roofline.main(),
+    }
+    only = args.only.split(",") if args.only else list(benches)
+    failed = []
+    for name in only:
+        print(f"# ===== {name} =====")
+        try:
+            benches[name]()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""MCMComm as a TPU layout planner: treat a 16x16 pod as the paper's MCM
+grid and use the analytical framework to score layout choices for the
+assigned architectures (DESIGN.md §3 bridge).
+
+    PYTHONPATH=src python examples/mcm_plan_tpu.py
+"""
+from repro.configs import ARCHS, get_config
+from repro.sharding.mcm_planner import plan
+
+
+def main():
+    print(f"{'arch':<18} {'base_ms':>9} {'opt_ms':>9} {'overlap':>8} "
+          f"{'nonuniform_headroom':>20}")
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        if cfg.is_encoder:
+            seq, batch = 4096, 256
+        else:
+            seq, batch = 4096, 256
+        r = plan(cfg, (16, 16), seq, batch, layers=2, ga_budget=10)
+        print(f"{arch:<18} {r.baseline_latency*1e3:>9.3f} "
+              f"{r.optimized_latency*1e3:>9.3f} "
+              f"{r.modeled_speedup:>7.2f}x "
+              f"{r.nonuniform_headroom:>19.2f}x")
+    print("\n(headroom = extra gain from non-uniform partitions the")
+    print(" paper's GA finds but equal-shard SPMD cannot realize)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Quickstart: optimize a ViT inference schedule on a 4x4 MCM with
+MCMComm — the paper's core use-case in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import make_hw, optimize
+from repro.core.miqp import MIQPConfig
+from repro.graphs import vit_task
+
+
+def main():
+    task = vit_task(batch=1)               # ViT-B/16 as a GEMM chain
+    hw = make_hw("A", grid=4, memory="hbm")  # SIMBA-like corner-HBM MCM
+
+    print(hw.topology.describe())
+    print(f"\nworkload: {task.name}, {len(task)} GEMMs, "
+          f"{task.total_flops/1e9:.1f} GFLOPs")
+
+    for method in ("baseline", "simba", "ga", "miqp"):
+        r = optimize(task, hw, method, "latency",
+                     miqp_config=MIQPConfig(time_limit=30))
+        print(f"  {method:<9} latency={r.latency*1e6:9.1f} us  "
+              f"EDP={r.edp:.3e}  speedup={r.speedup_vs_baseline:5.2f}x  "
+              f"(solve {r.solve_seconds:.1f}s)")
+
+    best = optimize(task, hw, "miqp", "latency",
+                    miqp_config=MIQPConfig(time_limit=30))
+    pipe = best.pipeline(batch=8)
+    print(f"\nwith cross-sample pipelining (batch 8): "
+          f"{pipe.speedup:.2f}x additional throughput")
+
+
+if __name__ == "__main__":
+    main()

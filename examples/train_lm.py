@@ -1,0 +1,68 @@
+"""End-to-end training driver: train a ~100M-param llama-family model for
+a few hundred steps on CPU with the full production stack (data pipeline,
+AdamW + cosine schedule, fault-tolerant loop, checkpointing).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+The model is the smollm-360m *family* scaled to ~100M params (fewer
+layers/width, real vocab) — same code path the 256-chip config lowers.
+"""
+import argparse
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models import init_model
+from repro.runtime import FaultTolerantLoop
+from repro.train import adamw, cosine_schedule
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: smollm family at reduced depth/width, real vocab
+    # (tied 49152x768 embedding ≈ 38M + 8 blocks ≈ 62M).
+    cfg = get_config("smollm-360m").replace(
+        name="smollm-100m", n_layers=8, d_model=768, d_ff=2304,
+        n_heads=12, n_kv_heads=4, d_head=64, remat=False, attn_chunk=128)
+    n = cfg.param_count()
+    print(f"[example] {cfg.name}: ~{n/1e6:.0f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    opt = adamw(lr=cosine_schedule(3e-3, 20, args.steps))
+    state = init_train_state(params, opt)
+    step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+
+    pipe = Pipeline(DataConfig(kind="lm", vocab_size=cfg.vocab_size,
+                               seq_len=args.seq, global_batch=args.batch))
+    losses = []
+
+    def logged(st, batch):
+        st, m = step(st, batch)
+        losses.append(float(m["loss"]))
+        if len(losses) % 20 == 0:
+            import numpy as np
+            print(f"  step {len(losses):4d}  loss "
+                  f"{np.mean(losses[-20:]):.4f}")
+        return st, m
+
+    loop = FaultTolerantLoop(logged, pipe, Checkpointer(args.ckpt),
+                             ckpt_every=100)
+    state, report = loop.run(state, 0, args.steps)
+    print(f"[example] loss {report.losses[0]:.3f} -> "
+          f"{report.losses[-1]:.3f} over {report.steps_run} steps "
+          f"({report.bad_steps} rejected)")
+    assert report.losses[-1] < report.losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Atomic, elastic checkpointing.
+
+Layout per step: ``<dir>/step_<n>.tmp/`` → fsync → rename to
+``<dir>/step_<n>/`` (atomic publish; a crash mid-write never corrupts the
+latest checkpoint). Arrays are saved host-gathered as one ``.npz`` per
+top-level key plus a json manifest (tree structure, shapes, dtypes, step).
+
+Restore is *elastic*: arrays are loaded on host and ``device_put`` with
+the sharding derived for the *current* mesh — restoring a 256-chip
+checkpoint onto a 512-chip (or 64-chip) mesh just reshards. Optional
+background-thread saving keeps the train loop running (async checkpoint).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    tree: dict = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- save
+    def save(self, state, step: int, *, background: bool = False):
+        self.wait()   # never two writers in flight (incl. fg after bg)
+        flat = _flatten(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        if background:
+            self._thread = threading.Thread(
+                target=self._write, args=(host, step), daemon=True)
+            self._thread.start()
+        else:
+            self._write(host, step)
+
+    def _write(self, host: dict, step: int):
+        tmp = os.path.join(self.dir,
+                           f"step_{step}.tmp{os.getpid()}.{id(host)}")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k.replace("/", "|"): v for k, v in host.items()})
+        manifest = {
+            "step": step,
+            "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                     for k, v in host.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(tmp, ignore_errors=True)
+        else:
+            os.replace(tmp, final)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and ".tmp" not in d:
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int | None = None, shardings=None):
+        """Load checkpoint; if ``shardings`` (a pytree of NamedSharding
+        matching the state) is given, device_put each leaf accordingly —
+        this is the elastic-rescale path."""
+        step = step if step is not None else self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat = {k.replace("|", "/"): data[k] for k in data.files}
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_s = _flatten(shardings)
+            tree = _unflatten({
+                k: jax.device_put(v, flat_s[k]) if k in flat_s else v
+                for k, v in _flatten(tree).items()})
+        return tree, step

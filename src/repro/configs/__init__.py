@@ -1,0 +1,56 @@
+"""Assigned architecture configs. ``get_config(name)`` returns the exact
+published config; ``get_config(name, reduced=True)`` returns the
+small-family smoke variant (same structure, tiny dims)."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "gemma2-2b",
+    "smollm-360m",
+    "minicpm3-4b",
+    "internlm2-20b",
+    "zamba2-2.7b",
+    "mixtral-8x22b",
+    "deepseek-v2-236b",
+    "pixtral-12b",
+    "rwkv6-3b",
+    "hubert-xlarge",
+)
+
+
+def _module(name: str):
+    mod = name.replace("-", "_").replace(".", "p")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str, reduced: bool = False):
+    m = _module(name)
+    return m.reduced_config() if reduced else m.config()
+
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+SHAPE_DEFS = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def runnable_cells():
+    """All (arch, shape) pairs honoring the documented skips
+    (DESIGN.md §4): long_500k only for sub-quadratic archs; no decode
+    shapes for encoder-only archs."""
+    cells = []
+    for a in ARCHS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            kind = SHAPE_DEFS[s]["kind"]
+            if cfg.is_encoder and kind == "decode":
+                continue
+            if s == "long_500k" and not cfg.sub_quadratic:
+                continue
+            cells.append((a, s))
+    return cells

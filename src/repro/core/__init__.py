@@ -1,0 +1,19 @@
+"""MCMComm core — the paper's contribution as a composable library.
+
+Layers:
+  * :mod:`repro.core.hw` — MCM packaging types A–D, Table-2 constants,
+    hop-count topology (incl. diagonal links, Sec. 5.1).
+  * :mod:`repro.core.workload` — GEMM-sequence tasks and partitions.
+  * :mod:`repro.core.evaluator` — end-to-end latency/energy/EDP model
+    (Sec. 4.3/4.4) with redistribution + async execution (Sec. 5.2/5.3).
+  * :mod:`repro.core.ga` / :mod:`repro.core.miqp` — the two solvers
+    (Sec. 6.2/6.3); :mod:`repro.core.simba` — the heuristic baseline.
+  * :mod:`repro.core.pipelining` — RCPSP cross-sample pipelining
+    (Sec. 5.4).
+  * :mod:`repro.core.netsim` — flow-level NoP simulator (Fig. 3).
+  * :mod:`repro.core.api` — one-call front door.
+"""
+from .api import ScheduleResult, baseline_result, optimize  # noqa: F401
+from .evaluator import EvalOptions, EvalResult, Evaluator  # noqa: F401
+from .hw import HWConfig, MCMType, Topology, make_hw  # noqa: F401
+from .workload import GemmOp, Partition, Task, uniform_partition  # noqa: F401

@@ -1,0 +1,174 @@
+"""Public entry points for the MCMComm core — the four scheduling schemes
+of the paper's Table 3 behind one call, plus pipelining.
+
+>>> from repro.core import api
+>>> res = api.optimize(task, hw, method="miqp", objective="latency")
+>>> res.latency, res.speedup_vs_baseline
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .evaluator import EvalOptions, EvalResult, Evaluator
+from .ga import GAConfig, run_ga
+from .hw import HWConfig
+from .miqp import MIQPConfig, run_miqp
+from .pipelining import PipelineResult, pipeline_batch
+from .simba import simba_partition
+from .workload import Partition, Task, uniform_partition
+
+__all__ = ["ScheduleResult", "optimize", "baseline_result", "METHODS"]
+
+METHODS = ("baseline", "simba", "ga", "miqp")
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    method: str
+    objective: str
+    partition: Partition
+    redist_mask: np.ndarray
+    eval: EvalResult
+    baseline: EvalResult
+    solve_seconds: float
+
+    @property
+    def latency(self) -> float:
+        return self.eval.latency
+
+    @property
+    def edp(self) -> float:
+        return self.eval.edp
+
+    @property
+    def speedup_vs_baseline(self) -> float:
+        if self.objective == "edp":
+            return self.baseline.edp / self.eval.edp
+        return self.baseline.latency / self.eval.latency
+
+    def pipeline(self, batch: int, use_milp: bool = False) -> PipelineResult:
+        return pipeline_batch(self.eval.segments(), batch, use_milp=use_milp)
+
+
+def _polish(task: Task, hw: HWConfig, opts: EvalOptions, part: Partition,
+            rd: np.ndarray, objective: str, rounds: int = 2
+            ) -> tuple[Partition, np.ndarray]:
+    """Coordinate descent on variables MIQP keeps fixed or cannot see:
+    collector columns, per-pair redistribution bits, and *placement* of the
+    per-row/column shares. The MIQP solve uses the paper's sync
+    approximation (max() per comm/comp pair), which is blind to which
+    chiplet row carries which share — under fused (async) execution the
+    busiest-compute row should sit nearest the entrance. Reordering a
+    partition vector is sum-preserving, so these moves stay feasible."""
+    ev = Evaluator(task, hw, opts)
+    key = "edp" if objective == "edp" else "latency"
+
+    def score(p, m):
+        return getattr(ev.evaluate(p, m), key)
+
+    best = score(part, rd)
+    part = part.copy()
+    rd = rd.copy()
+    n = len(task)
+    for _ in range(rounds):
+        improved = False
+        for i in range(n):
+            # placement polish: try monotone orderings of the shares
+            for arr in (part.Px[i], part.Py[i]):
+                cur = arr.copy()
+                for cand in (np.sort(cur)[::-1], np.sort(cur), cur[::-1]):
+                    arr[:] = cand
+                    s = score(part, rd)
+                    if s < best - 1e-18:
+                        best = s
+                        cur = arr.copy()
+                        improved = True
+                    else:
+                        arr[:] = cur
+            if rd[i]:
+                for c in range(hw.Y):
+                    if c == part.collectors[i]:
+                        continue
+                    old = part.collectors[i]
+                    part.collectors[i] = c
+                    s = score(part, rd)
+                    if s < best:
+                        best = s
+                        improved = True
+                    else:
+                        part.collectors[i] = old
+            if ev.chain_valid[i]:
+                rd[i] = not rd[i]
+                s = score(part, rd)
+                if s < best:
+                    best = s
+                    improved = True
+                else:
+                    rd[i] = not rd[i]
+        if not improved:
+            break
+    return part, rd
+
+
+def baseline_result(task: Task, hw: HWConfig) -> EvalResult:
+    """Layer-Sequential baseline: uniform partitioning, no optimizations
+    (Table 3 row 1). Evaluated on the plain mesh (no diagonal links)."""
+    hw0 = hw.replace(diagonal_links=False)
+    ev = Evaluator(task, hw0, EvalOptions())
+    return ev.evaluate(uniform_partition(task, hw.X, hw.Y))
+
+
+def optimize(
+    task: Task,
+    hw: HWConfig,
+    method: str = "miqp",
+    objective: str = "latency",
+    options: EvalOptions | None = None,
+    ga_config: GAConfig | None = None,
+    miqp_config: MIQPConfig | None = None,
+) -> ScheduleResult:
+    """Run one scheduling scheme of Table 3 and score it against the LS
+    baseline. ``ga``/``miqp`` enable the co-optimizations (diagonal links
+    + redistribution; GA additionally uses async fusion); ``baseline`` and
+    ``simba`` run without them, as in the paper's methodology."""
+    base = baseline_result(task, hw)
+    t0 = time.perf_counter()
+    if method == "baseline":
+        hw0 = hw.replace(diagonal_links=False)
+        part = uniform_partition(task, hw.X, hw.Y)
+        ev = Evaluator(task, hw0, EvalOptions())
+        res = ev.evaluate(part)
+        rd = np.zeros(len(task), dtype=bool)
+    elif method == "simba":
+        hw0 = hw.replace(diagonal_links=False)
+        part = simba_partition(task, hw0)
+        ev = Evaluator(task, hw0, EvalOptions())
+        res = ev.evaluate(part)
+        rd = np.zeros(len(task), dtype=bool)
+    elif method == "ga":
+        opts = options or EvalOptions(redistribution=True, async_exec=True)
+        hw1 = hw.replace(diagonal_links=True)
+        out = run_ga(task, hw1, objective, opts, ga_config or GAConfig())
+        part, rd = out.partition, out.redist_mask
+        res = Evaluator(task, hw1, opts).evaluate(part, rd)
+    elif method == "miqp":
+        # Solve under the paper's sync approximation (Sec. 6.3.2 adds max()
+        # sync per comm/comp pair), then score the resulting partition under
+        # the full runtime (same options as GA) and polish the discrete
+        # side-variables (collectors, redistribution bits) with the exact
+        # evaluator — MIQP fixes those during the solve.
+        solve_opts = EvalOptions(redistribution=True, async_exec=False)
+        opts = options or EvalOptions(redistribution=True, async_exec=True)
+        hw1 = hw.replace(diagonal_links=True)
+        out = run_miqp(task, hw1, objective, solve_opts,
+                       miqp_config or MIQPConfig())
+        part, rd = out.partition, out.redist_mask
+        part, rd = _polish(task, hw1, opts, part, rd, objective)
+        res = Evaluator(task, hw1, opts).evaluate(part, rd)
+    else:
+        raise ValueError(f"unknown method {method!r}; one of {METHODS}")
+    dt = time.perf_counter() - t0
+    return ScheduleResult(method, objective, part, rd, res, base, dt)

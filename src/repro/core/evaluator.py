@@ -1,0 +1,306 @@
+"""End-to-end analytical cost evaluator — paper Sec. 4.2.4–4.4 and 5.1–5.3.
+
+Implements ``Cost = Sche({comp(*_i), comm(*_i)})`` (eq. 3–6) for a Task on
+an HWConfig under a candidate Partition, returning latency, energy and EDP
+plus a per-op breakdown that the RCPSP pipeliner (Sec. 5.4) consumes.
+
+All math is vectorized numpy with a leading *population* axis so that the
+genetic algorithm (Sec. 6.2) evaluates its whole population in one call.
+float64 throughout — cycle counts overflow float32 mantissas.
+
+Modeling conventions (documented in DESIGN.md §5):
+  * Off-chip and NoP serialization per phase combine as ``max`` — the
+    congestion-aware regime pick of Sec. 3.2/4.3.3 (memory-bound vs
+    NoP-bound); the slower resource is the bottleneck.
+  * Per-chiplet NoP time for distribution = received_bytes × hops / BW_nop
+    with the hop matrices of eqs. 10–12 (+ the diagonal-link alternative
+    of Sec. 5.1.1 taken as a per-chiplet min).
+  * Collection (eq. 8) = non-entrance group bytes / (entrance_links × BW).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .hw import HWConfig
+from .workload import Partition, Task
+
+__all__ = ["EvalOptions", "EvalResult", "Evaluator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalOptions:
+    """Optimization toggles (Sec. 5). The LS baseline has all False."""
+
+    redistribution: bool = False   # Sec. 5.2 on-package redistribution
+    async_exec: bool = False       # Sec. 5.3 fused comm+comp
+    energy_mode: str = "paper"     # "paper" (eq. 4.4.1 verbatim) | "per_chiplet"
+
+    def __post_init__(self):
+        if self.energy_mode not in ("paper", "per_chiplet"):
+            raise ValueError(f"bad energy_mode {self.energy_mode}")
+
+
+@dataclasses.dataclass
+class EvalResult:
+    latency: float            # seconds
+    energy: float             # joules
+    edp: float                # J*s
+    t_in: np.ndarray          # [n_ops] input-communication seconds
+    t_comp: np.ndarray        # [n_ops]
+    t_out: np.ndarray         # [n_ops] offload-or-redistribution seconds
+    redist: np.ndarray        # [n_ops] bool, redistribution used after op i
+
+    def segments(self) -> list[tuple[str, float, float, float]]:
+        """(name, comm_in, comp, comm_out) per op for the pipeliner."""
+        return [
+            (f"op{i}", float(self.t_in[i]), float(self.t_comp[i]),
+             float(self.t_out[i]))
+            for i in range(len(self.t_in))
+        ]
+
+
+def _ceil_div(a, b):
+    return -(-a // b) if isinstance(a, int) else np.ceil(a / b)
+
+
+class Evaluator:
+    """Evaluates partitions for one (Task, HWConfig, EvalOptions) triple."""
+
+    def __init__(self, task: Task, hw: HWConfig, options: EvalOptions = EvalOptions()):
+        self.task = task
+        self.hw = hw
+        self.opts = options
+        top = hw.topology
+        self.top = top
+        n = len(task)
+        arr = task.arrays()
+        self.M = arr["M"].astype(np.float64)
+        self.K = arr["K"].astype(np.float64)
+        self.N = arr["N"].astype(np.float64)
+        self.sync = arr["sync"].astype(bool)
+        self.w_scale = arr["w_scale"].astype(np.float64)
+        self.epilogue = arr["epilogue"].astype(np.float64)
+
+        # chain_valid[i]: redistribution after op i is semantically legal —
+        # op i+1 consumes op i's output as its activation. Dims need not
+        # match exactly (pooling / im2col between conv layers reshapes the
+        # tensor locally in SRAM — the paper's AlexNet case); step 3 works
+        # on normalized row fractions.
+        cv = np.zeros(n, dtype=bool)
+        for i in range(n - 1):
+            cv[i] = bool(task.ops[i + 1].chained)
+        self.chain_valid = cv
+
+        # Topology constants.
+        self.B = float(hw.bytes_per_elem)
+        self.bw_nop = float(hw.bw_nop)
+        self.bw_ent = float(top.bw_mem_per_entrance)
+        self.freq = float(hw.freq_hz)
+        self.high_bw = self.bw_ent > self.bw_nop   # congestion regime
+        self.hA = (top.hops_row_shared if self.high_bw else top.hops_low
+                   ).astype(np.float64)            # A is row-shared
+        self.hW = (top.hops_col_shared if self.high_bw else top.hops_low
+                   ).astype(np.float64)            # W is col-shared
+        self.h_min = top.hops_low.astype(np.float64)
+
+        E = top.n_entrances
+        X, Y = hw.X, hw.Y
+        ent_mask = np.zeros((E, X, Y), dtype=bool)
+        eid = top.entrance_id
+        for e in range(E):
+            ent_mask[e] = eid == e
+        self.ent_mask = ent_mask
+        self.row_mask = ent_mask.any(axis=2)       # [E, X]
+        self.col_mask = ent_mask.any(axis=1)       # [E, Y]
+        self.ent_pos = top.entrance_pos            # [E, X, Y]
+        self.links = top.entrance_links.astype(np.float64)  # [E]
+
+    # ------------------------------------------------------------------ API
+    def evaluate(self, part: Partition, redist_mask: np.ndarray | None = None
+                 ) -> EvalResult:
+        part.validate(self.task)
+        Px = part.Px[None].astype(np.float64)
+        Py = part.Py[None].astype(np.float64)
+        coll = part.collectors[None].astype(np.int64)
+        if redist_mask is None:
+            rd = (self.chain_valid & self.opts.redistribution)[None]
+        else:
+            rd = (np.asarray(redist_mask, dtype=bool) & self.chain_valid)[None]
+            if not self.opts.redistribution:
+                rd = np.zeros_like(rd)
+        out = self.evaluate_batch(Px, Py, coll, rd.astype(np.float64))
+        return EvalResult(
+            latency=float(out["latency"][0]),
+            energy=float(out["energy"][0]),
+            edp=float(out["edp"][0]),
+            t_in=out["t_in"][0],
+            t_comp=out["t_comp"][0],
+            t_out=out["t_out"][0],
+            redist=rd[0],
+        )
+
+    def evaluate_batch(
+        self,
+        Px: np.ndarray,      # [P, n, X] float
+        Py: np.ndarray,      # [P, n, Y] float
+        collectors: np.ndarray,  # [P, n] int
+        redist: np.ndarray,  # [P, n] float in {0,1}: redistribute after op i
+    ) -> dict[str, np.ndarray]:
+        hw, top = self.hw, self.top
+        B, bw_nop, bw_ent = self.B, self.bw_nop, self.bw_ent
+        X, Y = hw.X, hw.Y
+        R, C = float(hw.R), float(hw.C)
+        M, K, N = self.M, self.K, self.N
+
+        redist = redist * self.chain_valid[None, :]
+        if not self.opts.redistribution:
+            redist = np.zeros_like(redist)
+        # redist_in[i] = output of op i-1 was redistributed (A already local).
+        redist_in = np.concatenate(
+            [np.zeros_like(redist[:, :1]), redist[:, :-1]], axis=1)
+        keepA = 1.0 - redist_in       # fraction of A loads from memory
+        redist_out = redist
+
+        # -------------------------------------------------- data volumes
+        chunk = Px[:, :, :, None] * Py[:, :, None, :] * B        # [P,n,X,Y]
+        inA = Px * K[None, :, None] * B                          # [P,n,X]
+        inW = Py * (K * self.w_scale)[None, :, None] * B         # [P,n,Y]
+
+        # --------------------------------------------- phase 1: data load
+        # Off-chip serialization per entrance (duplicated pulls per group —
+        # the paper's LS data-duplication overhead shows up here).
+        A_e = np.einsum("ex,pnx->pne", self.row_mask, inA)
+        W_e = np.einsum("ey,pny->pne", self.col_mask, inW)
+        t_off_in = ((keepA[..., None] * A_e + W_e) / bw_ent).max(axis=-1)
+
+        # NoP distribution: per-chiplet received bytes × hops / BW.
+        tA_xy = inA[:, :, :, None] * self.hA[None, None]          # bytes*hops
+        tW_xy = inW[:, :, None, :] * self.hW[None, None]
+        nop_in_xy = (keepA[..., None, None] * tA_xy + tW_xy) / bw_nop
+        t_nop_in = nop_in_xy.max(axis=(-1, -2))
+        t_in = np.maximum(t_off_in, t_nop_in)
+
+        # ------------------------------------------------ phase 2: compute
+        # SCALE-Sim output-stationary latency (eq. 7) + SIMD epilogue.
+        fill = (2.0 * R + C + K - 2.0)[None, :, None, None]
+        tiles = np.ceil(Px / R)[:, :, :, None] * np.ceil(Py / C)[:, :, None, :]
+        cyc = fill * tiles
+        cyc = cyc + (self.epilogue[None, :, None, None]
+                     * Px[:, :, :, None] * Py[:, :, None, :] / C)
+        t_comp_xy = cyc / self.freq
+        t_comp = t_comp_xy.max(axis=(-1, -2))
+
+        # ----------------------------------------- phase 3a: offload path
+        # eq. 8 uses the *full* group bytes over the entrance links for 2.5D
+        # packages; only a 3D entrance's own chunk bypasses the NoP (it sits
+        # directly under its memory stack).
+        out_e = np.einsum("exy,pnxy->pne", self.ent_mask, chunk)
+        out_at_ent = np.einsum("exy,pnxy->pne", self.ent_pos, chunk)
+        is3d = self.top.entrance_is_3d[None, None, :]
+        nonlocal_out = out_e - np.where(is3d, out_at_ent, 0.0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            t_collect = np.where(
+                self.links[None, None] > 0,
+                nonlocal_out / (self.links[None, None] * bw_nop),
+                0.0,
+            ).max(axis=-1)
+        t_off_out = (out_e / bw_ent).max(axis=-1)
+        t_offload = np.maximum(t_collect, t_off_out)
+
+        # --------------------------------- phase 3b: redistribution path
+        # (Sec. 5.2) Step 1: row gather toward collector column c.
+        yidx = np.arange(Y)[None, None, :]
+        cc = collectors[..., None]
+        left_m = (yidx < cc).astype(np.float64)                  # [P,n,Y]
+        right_m = (yidx > cc).astype(np.float64)
+        left_x = np.einsum("pnxy,pny->pnx", chunk, left_m)
+        right_x = np.einsum("pnxy,pny->pnx", chunk, right_m)
+        t1 = np.maximum(left_x, right_x).max(axis=-1) / bw_nop
+        # Step 2: broadcast the assembled row block along the row.
+        rowbytes = Px * N[None, :, None] * B                     # [P,n,X]
+        t2 = rowbytes.max(axis=-1) / bw_nop
+        # Step 3: column redistribution from Px_i to Px_{i+1}. Row counts of
+        # consecutive ops may differ (pooling/im2col); compare normalized
+        # cumulative fractions and scale by op-i bytes.
+        cumf = np.cumsum(Px, axis=-1) / np.maximum(M[None, :, None], 1.0)
+        cumf_next = np.concatenate([cumf[:, 1:], cumf[:, -1:]], axis=1)
+        crossing = (np.abs(cumf - cumf_next)[:, :, : X - 1]
+                    * M[None, :, None]) if X > 1 else \
+            np.zeros_like(cumf[:, :, :0])
+        cross_bytes = crossing * N[None, :, None] * B
+        t3 = (cross_bytes.max(axis=-1) / bw_nop) if X > 1 else \
+            np.zeros_like(t1)
+        t_redist = t1 + t2 + t3
+
+        t_out = np.where(redist_out > 0, t_redist, t_offload)
+
+        # Output sync for softmax/layernorm-class ops: exchange of row
+        # statistics across the chiplet row (small, eq.-9 convention).
+        t_sync = (self.sync[None, :]
+                  * (Px.max(axis=-1) * 4.0 * B * max(Y - 1, 1)) / bw_nop)
+
+        # ------------------------------------------------------- schedule
+        if self.opts.async_exec:
+            # Fuse comm+comp per chiplet for non-sync ops (Sec. 5.3).
+            fused_xy = nop_in_xy + t_comp_xy
+            t_fused = np.maximum(fused_xy.max(axis=(-1, -2)), t_off_in)
+            core = np.where(self.sync[None, :], t_in + t_comp, t_fused)
+        else:
+            core = t_in + t_comp
+        t_ops = core + t_out + t_sync
+        latency = t_ops.sum(axis=1)
+
+        # --------------------------------------------------------- energy
+        e_sram = hw.e_sram_bit * 8.0
+        e_mem = hw.e_mem_bit * 8.0
+        e_nop = hw.e_nop_bit_hop * 8.0
+        e_mac = hw.e_mac_cycle
+
+        sram_bytes = (Y * inA.sum(axis=-1) + X * inW.sum(axis=-1)
+                      + chunk.sum(axis=(-1, -2)))
+        E_sram = e_sram * sram_bytes.sum(axis=1)
+
+        if self.opts.energy_mode == "paper":
+            # eq. 4.4.1 verbatim: c_MAC * cycles * R * C * (X*Y).
+            E_mac = e_mac * (cyc.max(axis=(-1, -2)) * R * C * X * Y).sum(axis=1)
+        else:
+            E_mac = e_mac * (cyc.sum(axis=(-1, -2)) * R * C).sum(axis=1)
+
+        mem_bytes = (keepA[..., None] * A_e + W_e
+                     + (1.0 - redist_out)[..., None] * out_e).sum(axis=(-1, -2))
+        E_mem = e_mem * mem_bytes
+
+        # NoP bytes×hops: loads + (collection | redistribution).
+        load_bh = (keepA[..., None, None] * tA_xy + tW_xy).sum(axis=(-1, -2))
+        collect_bh = (chunk * self.h_min[None, None]).sum(axis=(-1, -2))
+        red_bh = (
+            (left_x + right_x).sum(axis=-1)            # step-1 gather
+            + rowbytes.sum(axis=-1) * max(Y - 1, 1)    # step-2 broadcast
+            + (cross_bytes.sum(axis=-1) * Y if X > 1 else 0.0)  # step 3
+        )
+        nop_bh = load_bh + np.where(redist_out > 0, red_bh, collect_bh)
+        E_nop = e_nop * nop_bh.sum(axis=1)
+
+        energy = E_sram + E_mac + E_mem + E_nop
+        return {
+            "latency": latency,
+            "energy": energy,
+            "edp": energy * latency,
+            "t_in": t_in,
+            "t_comp": t_comp,
+            "t_out": t_out,
+            "E_sram": E_sram,
+            "E_mac": E_mac,
+            "E_mem": E_mem,
+            "E_nop": E_nop,
+        }
+
+    # -------------------------------------------------------------- helpers
+    def objective_batch(self, Px, Py, collectors, redist, objective: str
+                        ) -> np.ndarray:
+        out = self.evaluate_batch(Px, Py, collectors, redist)
+        if objective not in out:
+            raise ValueError(f"unknown objective {objective}")
+        return out[objective]

@@ -1,0 +1,295 @@
+"""Hardware model for MCM (multi-chip-module) systems — paper Sec. 4.1/4.2.1.
+
+Defines the four packaging types (Fig. 2/4), the Table-2 energy/bandwidth
+constants, and the chiplet-grid topology: per-chiplet local indices (x, y)
+relative to the nearest "global chiplet" (memory entrance), hop-count
+matrices for every communication case in Sec. 4.3 (including the diagonal
+link strategy of Sec. 5.1), and entrance link counts used by the collection
+equation (eq. 8).
+
+Everything here is plain numpy, computed once per (HWConfig) and then
+consumed as constants by the jax-vectorized evaluator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import cached_property
+
+import numpy as np
+
+__all__ = [
+    "MCMType",
+    "HWConfig",
+    "Topology",
+    "TABLE2",
+    "make_hw",
+]
+
+
+class MCMType(str, enum.Enum):
+    """Packaging types from Fig. 2 — position of main memory vs chiplets.
+
+    A: 2.5D, single memory stack at a corner (SIMBA / Manticore).
+    B: 2.5D, memory stacks distributed along the left+right edges (MTIA).
+    C: 3D, memory stacked on top of every chiplet.
+    D: hybrid of B and C — edge stacks plus 3D memory on the interior quad
+       (Chiplet-Gym-style); memory distance is near-uniform.
+    """
+
+    A = "A"
+    B = "B"
+    C = "C"
+    D = "D"
+
+
+#: Table 2 — MCMComm system configurations. Bandwidths in bytes/s, energies
+#: in Joules/bit (pJ converted), MAC energy in Joules/cycle.
+TABLE2 = {
+    "bw_hbm": 1000e9,          # 1000 GB/s
+    "bw_dram": 60e9,           # 60 GB/s
+    "bw_nop": 60e9,            # 60 GB/s per NoP link
+    "e_nop_bit_hop": 1.285e-12,
+    "e_dram_bit": 14.8e-12,
+    "e_hbm_bit": 4.11e-12,
+    "e_sram_bit": 0.28e-12,
+    "e_mac_cycle": 4.6e-12,
+    "freq_hz": 1.0e9,          # 1 GHz chiplet clock (SCALE-Sim default class)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HWConfig:
+    """``HW = {BW_nop, BW_mem, X, Y, R, C, type}`` — paper eq. in Sec 4.2.1.
+
+    ``bw_mem`` is the *total* off-chip bandwidth of the package; it is split
+    evenly across memory entrances for types B/C/D so that packaging types
+    are iso-bandwidth comparable (the paper's Fig. 3(c) experiment keeps a
+    single memory node and moves it; ``n_mem_nodes=1`` reproduces that).
+    """
+
+    bw_nop: float = TABLE2["bw_nop"]
+    bw_mem: float = TABLE2["bw_hbm"]
+    X: int = 4
+    Y: int = 4
+    R: int = 16
+    C: int = 16
+    mcm_type: MCMType = MCMType.A
+    diagonal_links: bool = False
+    freq_hz: float = TABLE2["freq_hz"]
+    bytes_per_elem: int = 1            # int8 edge-inference datapath
+    # Energy constants (overridable for sensitivity studies).
+    e_nop_bit_hop: float = TABLE2["e_nop_bit_hop"]
+    e_mem_bit: float = TABLE2["e_hbm_bit"]
+    e_sram_bit: float = TABLE2["e_sram_bit"]
+    e_mac_cycle: float = TABLE2["e_mac_cycle"]
+
+    def __post_init__(self):
+        if self.X < 1 or self.Y < 1:
+            raise ValueError("grid must be at least 1x1")
+        if self.R < 1 or self.C < 1:
+            raise ValueError("systolic array must be at least 1x1")
+
+    @property
+    def n_chiplets(self) -> int:
+        return self.X * self.Y
+
+    @cached_property
+    def topology(self) -> "Topology":
+        return Topology(self)
+
+    def replace(self, **kw) -> "HWConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _entrances(hw: HWConfig) -> list[tuple[int, int, str]]:
+    """Memory entrance chiplets as (gx, gy, kind) with kind in
+    {"corner", "edge", "3d"}."""
+    X, Y = hw.X, hw.Y
+    t = hw.mcm_type
+    if t == MCMType.A:
+        return [(0, 0, "corner")]
+    if t == MCMType.B:
+        # Memory stacks on left and right edges, one per row per side.
+        out = []
+        for gx in range(X):
+            out.append((gx, 0, "edge"))
+            if Y > 1:
+                out.append((gx, Y - 1, "edge"))
+        return out
+    if t == MCMType.C:
+        return [(gx, gy, "3d") for gx in range(X) for gy in range(Y)]
+    if t == MCMType.D:
+        # Type B edges + 3D stacks on the interior quad.
+        out = []
+        for gx in range(X):
+            out.append((gx, 0, "edge"))
+            if Y > 1:
+                out.append((gx, Y - 1, "edge"))
+        x0, x1 = (X - 1) // 2, X // 2
+        y0, y1 = (Y - 1) // 2, Y // 2
+        for gx in {x0, x1}:
+            for gy in {y0, y1}:
+                if 0 < gy < Y - 1 or Y <= 2:
+                    out.append((gx, gy, "3d"))
+        return out
+    raise ValueError(f"unknown MCM type {t}")
+
+
+def _n_mesh_links(gx: int, gy: int, X: int, Y: int, diagonal: bool) -> int:
+    """Number of NoP links incident to chiplet (gx, gy) in an X*Y mesh.
+
+    Diagonal links (Sec. 5.1) add one diagonal neighbour toward the grid
+    interior — a corner global chiplet goes from 2 to 3 entrance links,
+    the paper's "50% more bandwidth on the bottleneck communication".
+    """
+    n = 0
+    n += 1 if gx > 0 else 0
+    n += 1 if gx < X - 1 else 0
+    n += 1 if gy > 0 else 0
+    n += 1 if gy < Y - 1 else 0
+    if diagonal:
+        # One diagonal link per chiplet toward the interior diagonal mate.
+        if (gx < X - 1 and gy < Y - 1) or (gx > 0 and gy > 0):
+            n += 1
+    return n
+
+
+class Topology:
+    """Precomputed per-chiplet indexing and hop matrices for one HWConfig.
+
+    Arrays are indexed [gx, gy] over the *global* grid. Chiplets are grouped
+    by their nearest memory entrance; within a group, (x, y) are the local
+    indices of Sec. 4.2.1 ("rows and columns away from the global chiplet")
+    and (Xg, Yg) the group extents that replace the global X, Y in the hop
+    equations (for type A the group is the whole grid, so they coincide).
+    """
+
+    def __init__(self, hw: HWConfig):
+        self.hw = hw
+        X, Y = hw.X, hw.Y
+        ents = _entrances(hw)
+        self.entrances = ents
+        self.n_entrances = len(ents)
+        gx = np.arange(X)[:, None] * np.ones((1, Y), dtype=int)
+        gy = np.ones((X, 1), dtype=int) * np.arange(Y)[None, :]
+
+        # Assign each chiplet to its nearest entrance (manhattan), tie-break
+        # by entrance order (deterministic).
+        dists = np.stack(
+            [np.abs(gx - ex) + np.abs(gy - ey) for ex, ey, _ in ents], axis=0
+        )
+        self.entrance_id = np.argmin(dists, axis=0)  # [X, Y]
+        ex = np.array([e[0] for e in ents])
+        ey = np.array([e[1] for e in ents])
+        self.x_local = np.abs(gx - ex[self.entrance_id])  # [X, Y]
+        self.y_local = np.abs(gy - ey[self.entrance_id])
+
+        # Group extents: max local index + 1 within each group.
+        self.Xg = np.ones((X, Y), dtype=int)
+        self.Yg = np.ones((X, Y), dtype=int)
+        for e in range(self.n_entrances):
+            m = self.entrance_id == e
+            if m.any():
+                self.Xg[m] = int(self.x_local[m].max()) + 1
+                self.Yg[m] = int(self.y_local[m].max()) + 1
+
+        # Entrance link counts (for eq. 8 collection bandwidth). The
+        # entrance chiplet's own data never crosses the NoP (it sits on the
+        # off-chip port / 3D via), so collection counts only non-entrance
+        # bytes; the links are the mesh links incident to the entrance.
+        kinds = [e[2] for e in ents]
+        self.entrance_links = np.array(
+            [
+                _n_mesh_links(exi, eyi, X, Y, hw.diagonal_links)
+                for (exi, eyi, k) in ents
+            ]
+        )
+        # One-hot mask of entrance positions per group.
+        self.entrance_pos = np.zeros((self.n_entrances, X, Y), dtype=bool)
+        for i, (exi, eyi, _) in enumerate(ents):
+            self.entrance_pos[i, exi, eyi] = True
+        self.entrance_is_3d = np.array([k == "3d" for k in kinds])
+        # Per-chiplet: is its entrance a 3D (zero-hop) stack?
+        self.is_3d = self.entrance_is_3d[self.entrance_id]
+
+        # Per-entrance memory bandwidth share (iso-total-bandwidth).
+        self.bw_mem_per_entrance = hw.bw_mem / self.n_entrances
+
+        # Chiplets per entrance group (for collection-link sharing).
+        self.group_size = np.bincount(
+            self.entrance_id.ravel(), minlength=self.n_entrances
+        )
+
+        self._build_hop_matrices()
+
+    # ----------------------------------------------------------------- hops
+    def _build_hop_matrices(self):
+        hw = self.hw
+        x, y = self.x_local, self.y_local
+        Xg, Yg = self.Xg, self.Yg
+
+        # Case 1 (low off-chip BW, eq. 10): links are free when data
+        # arrives, minimal path.
+        self.hops_low = x + y
+
+        # Case 2.1 (high BW, shared data): send to target row/col first
+        # (congested first column/row), farthest-first ordering adds the
+        # waiting term. Row-shared (eq. 11): X + y. Col-shared (eq. 12): Y+x.
+        h_row = Xg + y
+        h_col = Yg + x
+        if hw.diagonal_links:
+            # Sec 5.1.1: diagonal alternative — wait (X - x), then
+            # min(x, y) diagonal hops + |x - y| straight hops
+            #   = X - x + max(x, y). The two strategies use disjoint links,
+            # so each chiplet takes the min.
+            h_row = np.minimum(h_row, Xg - x + np.maximum(x, y))
+            h_col = np.minimum(h_col, Yg - y + np.maximum(x, y))
+        self.hops_row_shared = h_row
+        self.hops_col_shared = h_col
+
+        # 3D-stacked chiplets read memory directly: zero NoP hops.
+        for a in ("hops_low", "hops_row_shared", "hops_col_shared"):
+            m = getattr(self, a).copy()
+            m[self.is_3d & (self.x_local == 0) & (self.y_local == 0)] = 0
+            setattr(self, a, m)
+
+        # Collection (eq. 8) effective entrance link bandwidth per group —
+        # number of NoP links into the entrance chiplet; 3D entrances
+        # collect at memory bandwidth directly (no NoP bottleneck).
+        self.collect_links = np.maximum(self.entrance_links, 0)
+
+    # ------------------------------------------------------------- helpers
+    def describe(self) -> str:
+        hw = self.hw
+        lines = [
+            f"MCM type {hw.mcm_type.value}: {hw.X}x{hw.Y} chiplets, "
+            f"{hw.R}x{hw.C} systolic, NoP {hw.bw_nop/1e9:.0f} GB/s, "
+            f"mem {hw.bw_mem/1e9:.0f} GB/s over {self.n_entrances} "
+            f"entrance(s), diagonal={hw.diagonal_links}",
+            f"entrance links: {self.entrance_links.tolist()}",
+        ]
+        return "\n".join(lines)
+
+
+def make_hw(
+    mcm_type: str | MCMType = "A",
+    grid: int | tuple[int, int] = 4,
+    memory: str = "hbm",
+    diagonal_links: bool = False,
+    **kw,
+) -> HWConfig:
+    """Convenience constructor: ``make_hw("A", 4, "hbm")``."""
+    if isinstance(grid, int):
+        grid = (grid, grid)
+    bw_mem = TABLE2["bw_hbm"] if memory.lower() == "hbm" else TABLE2["bw_dram"]
+    e_mem = TABLE2["e_hbm_bit"] if memory.lower() == "hbm" else TABLE2["e_dram_bit"]
+    return HWConfig(
+        X=grid[0],
+        Y=grid[1],
+        mcm_type=MCMType(mcm_type),
+        bw_mem=bw_mem,
+        e_mem_bit=e_mem,
+        diagonal_links=diagonal_links,
+        **kw,
+    )

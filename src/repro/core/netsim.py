@@ -1,0 +1,168 @@
+"""Flow-level NoP network simulator — reproduces the paper's Fig. 3
+motivation study (done there with ASTRA-sim).
+
+Model: a 2-D mesh of chiplets with dimension-ordered (row-first) XY
+routing, plus a memory node attached to one or more chiplets through its
+memory-interface link (capacity = memory bandwidth). All chiplets
+concurrently pull a fixed message from memory; flows share links by
+max-min fair allocation, advanced event-by-event until completion.
+
+This reproduces the paper's three observations:
+  * DRAM (low BW): the memory link is the bottleneck — doubling NoP
+    bandwidth yields no improvement (Fig. 3a/d).
+  * HBM (high BW): congestion moves onto the mesh links near the
+    attachment point — latency scales linearly with NoP BW (Fig. 3b/d).
+  * Central placement balances the mesh load (12 flows on the hottest
+    corner link vs 8 centrally) — ≈1.5× over peripheral for HBM
+    (paper: 1.53×, Fig. 3c/d).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["MeshNet", "simulate_pull", "fig3_case"]
+
+GB = 1e9
+
+
+@dataclasses.dataclass
+class Flow:
+    dst: int
+    bytes_left: float
+    route: list[tuple[int, int]]   # list of directed link keys
+    done_at: float | None = None
+
+
+class MeshNet:
+    """X×Y mesh + memory node (id = X*Y) attached to ``attach`` chiplets."""
+
+    def __init__(self, X: int, Y: int, bw_nop: float, bw_mem: float,
+                 attach: list[int]):
+        self.X, self.Y = X, Y
+        self.mem = X * Y
+        self.attach = attach
+        self.cap: dict[tuple[int, int], float] = {}
+        for r in range(X):
+            for c in range(Y):
+                u = r * Y + c
+                for (rr, cc) in ((r + 1, c), (r, c + 1)):
+                    if rr < X and cc < Y:
+                        v = rr * Y + cc
+                        self.cap[(u, v)] = bw_nop
+                        self.cap[(v, u)] = bw_nop
+        # memory interface link(s): capacity = memory BW split across ports
+        for a in attach:
+            self.cap[(self.mem, a)] = bw_mem / len(attach)
+            self.cap[(a, self.mem)] = bw_mem / len(attach)
+
+    def node_rc(self, n: int) -> tuple[int, int]:
+        return divmod(n, self.Y)
+
+    def route(self, src: int, dst: int) -> list[tuple[int, int]]:
+        """Memory → nearest attach chiplet → XY (row-dimension-first)."""
+        links = []
+        if src == self.mem:
+            # enter through the attach chiplet closest to dst
+            dr, dc = self.node_rc(dst)
+            best = min(self.attach,
+                       key=lambda a: abs(self.node_rc(a)[0] - dr)
+                       + abs(self.node_rc(a)[1] - dc))
+            links.append((self.mem, best))
+            src = best
+        r0, c0 = self.node_rc(src)
+        r1, c1 = self.node_rc(dst)
+        r, c = r0, c0
+        while r != r1:
+            nr = r + (1 if r1 > r else -1)
+            links.append((r * self.Y + c, nr * self.Y + c))
+            r = nr
+        while c != c1:
+            nc = c + (1 if c1 > c else -1)
+            links.append((r * self.Y + c, r * self.Y + nc))
+            c = nc
+        return links
+
+
+def _maxmin_rates(flows: list[Flow], cap: dict) -> dict[int, float]:
+    """Classic progressive-filling max-min fair allocation."""
+    active = {i for i, f in enumerate(flows) if f.bytes_left > 0}
+    residual = dict(cap)
+    on_link: dict[tuple[int, int], set[int]] = {}
+    for i in active:
+        for l in flows[i].route:
+            on_link.setdefault(l, set()).add(i)
+    rates: dict[int, float] = {}
+    unfixed = set(active)
+    while unfixed:
+        best_share, best_link = None, None
+        for l, users in on_link.items():
+            live = users & unfixed
+            if not live:
+                continue
+            share = residual[l] / len(live)
+            if best_share is None or share < best_share:
+                best_share, best_link = share, l
+        if best_link is None:
+            for i in unfixed:
+                rates[i] = float("inf")
+            break
+        for i in on_link[best_link] & set(unfixed):
+            rates[i] = best_share
+            unfixed.discard(i)
+            for l in flows[i].route:
+                residual[l] -= best_share
+        residual = {l: max(0.0, v) for l, v in residual.items()}
+    return rates
+
+
+def simulate_pull(net: MeshNet, message_bytes: float
+                  ) -> dict[str, object]:
+    """All chiplets pull ``message_bytes`` from memory concurrently."""
+    flows = [Flow(d, message_bytes, net.route(net.mem, d))
+             for d in range(net.X * net.Y)]
+    t = 0.0
+    link_bytes: dict[tuple[int, int], float] = {l: 0.0 for l in net.cap}
+    guard = 0
+    while any(f.bytes_left > 1e-6 for f in flows):
+        guard += 1
+        if guard > 10000:
+            raise RuntimeError("simulation did not converge")
+        rates = _maxmin_rates(flows, net.cap)
+        # time to next completion
+        dt = min(f.bytes_left / rates[i] for i, f in enumerate(flows)
+                 if f.bytes_left > 1e-6 and rates.get(i, 0) > 0)
+        for i, f in enumerate(flows):
+            if f.bytes_left > 1e-6:
+                moved = rates[i] * dt
+                for l in f.route:
+                    link_bytes[l] += min(moved, f.bytes_left)
+                f.bytes_left = max(0.0, f.bytes_left - moved)
+                if f.bytes_left <= 1e-6 and f.done_at is None:
+                    f.done_at = t + dt
+        t += dt
+    util = {l: b / (net.cap[l] * t) if t > 0 else 0.0
+            for l, b in link_bytes.items()}
+    return {"latency": t, "link_bytes": link_bytes, "link_util": util,
+            "flows": flows}
+
+
+def fig3_case(memory: str = "hbm", placement: str = "peripheral",
+              bw_nop: float = 60 * GB, message: float = 1 * GB,
+              X: int = 4, Y: int = 4) -> dict[str, object]:
+    """One cell of the paper's Fig. 3 study (4×4 mesh, 1 GB pulls,
+    DRAM 60 GB/s / HBM 1024 GB/s)."""
+    bw_mem = 1024 * GB if memory.lower() == "hbm" else 60 * GB
+    if placement == "peripheral":
+        attach = [0]
+    elif placement == "central":
+        attach = [1 * Y + 1]
+    else:
+        raise ValueError(placement)
+    net = MeshNet(X, Y, bw_nop, bw_mem, attach)
+    out = simulate_pull(net, message)
+    out["memory"] = memory
+    out["placement"] = placement
+    out["bw_nop"] = bw_nop
+    return out

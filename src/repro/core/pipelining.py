@@ -1,0 +1,246 @@
+"""Cross-sample pipelining — paper Sec. 5.4 / Fig. 7 / Fig. 11.
+
+Within one sample the GEMM chain is sequential, but samples of a batch are
+independent, so communication of one sample can overlap computation of
+another. The paper casts this as a resource-constrained project scheduling
+problem (RCPSP) with two unit-capacity resources — the NoP ("comm") and the
+chiplet array ("comp") — and solves it with an ILP.
+
+We provide both a priority list scheduler (critical-path-first serial SGS —
+instantaneous, used as the feasible incumbent) and a time-indexed MILP via
+HiGHS (the paper's ILP, with a wall-clock budget). Durations come from the
+evaluator's per-op (comm_in, comp, comm_out) breakdown.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+__all__ = ["Job", "build_jobs", "list_schedule", "milp_schedule",
+           "sequential_makespan", "PipelineResult", "pipeline_batch"]
+
+COMM, COMP = "comm", "comp"
+
+
+@dataclasses.dataclass
+class Job:
+    jid: int
+    sample: int
+    op: int
+    kind: str          # "in" | "comp" | "out"
+    dur: float
+    resource: str      # COMM or COMP
+    preds: list[int]
+
+
+def build_jobs(segments: list[tuple[str, float, float, float]],
+               batch: int) -> list[Job]:
+    """``segments`` = per-op (name, t_in, t_comp, t_out) for ONE sample."""
+    jobs: list[Job] = []
+    for s in range(batch):
+        prev = -1
+        for i, (_, tin, tcomp, tout) in enumerate(segments):
+            trip = [("in", tin, COMM), ("comp", tcomp, COMP),
+                    ("out", tout, COMM)]
+            for kind, dur, res in trip:
+                preds = [prev] if prev >= 0 else []
+                j = Job(len(jobs), s, i, kind, float(max(dur, 0.0)), res,
+                        preds)
+                jobs.append(j)
+                prev = j.jid
+    return jobs
+
+
+def sequential_makespan(segments, batch: int) -> float:
+    return batch * float(sum(t1 + t2 + t3 for _, t1, t2, t3 in segments))
+
+
+def _critical_path(jobs: list[Job]) -> np.ndarray:
+    """Longest path from each job to the sink (priority for the SGS)."""
+    succ: dict[int, list[int]] = {j.jid: [] for j in jobs}
+    for j in jobs:
+        for p in j.preds:
+            succ[p].append(j.jid)
+    prio = np.zeros(len(jobs))
+    for j in reversed(jobs):  # jobs are topologically ordered by build
+        tail = max((prio[s] for s in succ[j.jid]), default=0.0)
+        prio[j.jid] = j.dur + tail
+    return prio
+
+
+def list_schedule(jobs: list[Job]) -> tuple[float, dict[int, float]]:
+    """Serial schedule-generation scheme, critical-path-first."""
+    prio = _critical_path(jobs)
+    n = len(jobs)
+    indeg = {j.jid: len(j.preds) for j in jobs}
+    ready_time = {j.jid: 0.0 for j in jobs}
+    free = {COMM: 0.0, COMP: 0.0}
+    start: dict[int, float] = {}
+    done = 0
+    # ready heap keyed by (-priority, jid)
+    heap = [(-prio[j.jid], j.jid) for j in jobs if indeg[j.jid] == 0]
+    heapq.heapify(heap)
+    pending: list[tuple[float, int]] = []   # (available_at, jid)
+    succ: dict[int, list[int]] = {j.jid: [] for j in jobs}
+    for j in jobs:
+        for p in j.preds:
+            succ[p].append(j.jid)
+    byid = {j.jid: j for j in jobs}
+    makespan = 0.0
+    while done < n:
+        if not heap:
+            # release the earliest pending job
+            t, jid = heapq.heappop(pending)
+            heapq.heappush(heap, (-prio[jid], jid))
+            continue
+        _, jid = heapq.heappop(heap)
+        j = byid[jid]
+        t0 = max(ready_time[jid], free[j.resource])
+        start[jid] = t0
+        t1 = t0 + j.dur
+        free[j.resource] = t1
+        makespan = max(makespan, t1)
+        done += 1
+        for s in succ[jid]:
+            ready_time[s] = max(ready_time[s], t1)
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                heapq.heappush(heap, (-prio[s], s))
+    return makespan, start
+
+
+def milp_schedule(jobs: list[Job], n_buckets: int = 64,
+                  time_limit: float = 60.0
+                  ) -> tuple[float, dict[int, float] | None]:
+    """Time-indexed RCPSP MILP (the paper's ILP). Falls back to the list
+    schedule if the model is too large or the solver finds nothing better."""
+    import scipy.sparse as sp
+    from scipy.optimize import Bounds, LinearConstraint, milp
+
+    ub_makespan, greedy_start = list_schedule(jobs)
+    if ub_makespan <= 0:
+        return ub_makespan, greedy_start
+    active = [j for j in jobs if j.dur > 0]
+    if len(active) * n_buckets > 60000:
+        return ub_makespan, greedy_start
+    dt = ub_makespan / n_buckets
+    d = {j.jid: max(1, int(np.ceil(j.dur / dt))) for j in active}
+    H = n_buckets + max(d.values())
+
+    nv = 0
+    var = {}
+    for j in active:
+        for t in range(H - d[j.jid] + 1):
+            var[j.jid, t] = nv
+            nv += 1
+    cmax = nv
+    nv += 1
+
+    rows, lo, hi = [], [], []
+
+    def add(idx, coef, l, h):
+        rows.append((idx, coef))
+        lo.append(l)
+        hi.append(h)
+
+    for j in active:
+        ids = [var[j.jid, t] for t in range(H - d[j.jid] + 1)]
+        add(ids, [1.0] * len(ids), 1.0, 1.0)
+        # makespan
+        add([cmax] + ids,
+            [1.0] + [-(t + d[j.jid]) for t in range(len(ids))], 0.0, np.inf)
+
+    # precedence (pred may be zero-duration → collapse to nearest active)
+    startexpr = {}
+    for j in active:
+        startexpr[j.jid] = ([var[j.jid, t]
+                             for t in range(H - d[j.jid] + 1)],
+                            list(range(H - d[j.jid] + 1)))
+    act_ids = {j.jid for j in active}
+
+    def resolve_pred(p):  # walk through zero-duration predecessors
+        byid = {j.jid: j for j in jobs}
+        stack = [p]
+        out = []
+        while stack:
+            q = stack.pop()
+            if q in act_ids:
+                out.append(q)
+            else:
+                stack.extend(byid[q].preds)
+        return out
+
+    for j in active:
+        for p in j.preds:
+            for q in resolve_pred(p):
+                ji, jc = startexpr[j.jid]
+                qi, qc = startexpr[q]
+                add(ji + qi, [float(c) for c in jc] + [-float(c) for c in qc],
+                    float(d[q]), np.inf)
+
+    # resource capacity per bucket
+    for res in (COMM, COMP):
+        members = [j for j in active if j.resource == res]
+        for tau in range(H):
+            idx = []
+            for j in members:
+                for t in range(max(0, tau - d[j.jid] + 1),
+                               min(tau, H - d[j.jid]) + 1):
+                    idx.append(var[j.jid, t])
+            if len(idx) > 1:
+                add(idx, [1.0] * len(idx), -np.inf, 1.0)
+
+    data, ri, ci = [], [], []
+    for r, (idx, coef) in enumerate(rows):
+        for jj, a in zip(idx, coef):
+            ri.append(r)
+            ci.append(jj)
+            data.append(a)
+    A = sp.csr_matrix((data, (ri, ci)), shape=(len(rows), nv))
+    c = np.zeros(nv)
+    c[cmax] = 1.0
+    integrality = np.ones(nv, dtype=int)
+    integrality[cmax] = 0
+    res = milp(c=c,
+               constraints=LinearConstraint(A, np.array(lo), np.array(hi)),
+               integrality=integrality,
+               bounds=Bounds(np.zeros(nv),
+                             np.concatenate([np.ones(nv - 1), [np.inf]])),
+               options={"time_limit": time_limit, "presolve": True})
+    if res.x is None:
+        return ub_makespan, greedy_start
+    ms = float(res.x[cmax]) * dt
+    if ms >= ub_makespan:
+        return ub_makespan, greedy_start
+    starts = {}
+    for (jid, t), v in var.items():
+        if res.x[v] > 0.5:
+            starts[jid] = t * dt
+    return ms, starts
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    batch: int
+    sequential: float
+    pipelined: float
+
+    @property
+    def speedup(self) -> float:
+        return self.sequential / self.pipelined if self.pipelined > 0 else 1.0
+
+    @property
+    def per_sample(self) -> float:
+        return self.pipelined / self.batch
+
+
+def pipeline_batch(segments, batch: int, use_milp: bool = False,
+                   time_limit: float = 30.0) -> PipelineResult:
+    jobs = build_jobs(segments, batch)
+    if use_milp:
+        ms, _ = milp_schedule(jobs, time_limit=time_limit)
+    else:
+        ms, _ = list_schedule(jobs)
+    return PipelineResult(batch, sequential_makespan(segments, batch), ms)

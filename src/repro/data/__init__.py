@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, make_pipeline  # noqa: F401

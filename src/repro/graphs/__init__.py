@@ -1,0 +1,14 @@
+"""Paper evaluation workloads as GEMM-sequence Tasks (Sec. 7): AlexNet,
+ViT, Vision Mamba, HydraNet — plus conversion of any assigned-architecture
+config into a Task for the TPU layout planner."""
+from .alexnet import alexnet_task  # noqa: F401
+from .hydranet import hydranet_task  # noqa: F401
+from .vision_mamba import vision_mamba_task  # noqa: F401
+from .vit import vit_task  # noqa: F401
+
+WORKLOADS = {
+    "alexnet": alexnet_task,
+    "vit": vit_task,
+    "vision_mamba": vision_mamba_task,
+    "hydranet": hydranet_task,
+}

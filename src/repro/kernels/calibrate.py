@@ -1,0 +1,29 @@
+"""Calibration mode for roofline cost extraction.
+
+XLA's ``cost_analysis()`` counts a ``while``-loop body once, not per trip,
+so scanned graphs under-report FLOPs/bytes/collective traffic by their
+trip counts. Under ``calibration()`` the chunked recurrences (SSD, WKV)
+fully unroll their chunk scans so every chunk's work appears in the HLO —
+this preserves the *production* chunk sizes, i.e. the linear-in-S compute
+profile, unlike simply setting chunk=S (which would be quadratic).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_CAL = contextvars.ContextVar("kernel_calibration", default=False)
+
+
+@contextlib.contextmanager
+def calibration(on: bool = True):
+    tok = _CAL.set(on)
+    try:
+        yield
+    finally:
+        _CAL.reset(tok)
+
+
+def scan_unroll():
+    """unroll= argument for inner lax.scans: full unroll when calibrating."""
+    return True if _CAL.get() else 1

@@ -1,0 +1,136 @@
+"""Pallas TPU flash attention (forward).
+
+Grid (B·H, Sq/bq, Skv/bk) with the KV dimension innermost: the f32
+accumulator / running max / running denominator for one query tile live in
+VMEM scratch across KV steps (streaming softmax — identical math to
+``blockwise.py``, tile-for-tile). GQA is handled in the index maps: query
+head h reads KV head h // (H // KV), so KV tiles are never materialized
+per-query-head in HBM. Supports causal, sliding-window and soft-capping.
+
+Block sizes default to (bq, bk) = (256, 512) with Dh up to 256 —
+(bq·Dh + 2·bk·Dh + bq·bk) f32 ≈ 1.2 MB of VMEM, comfortably inside the
+~16 MB/core budget with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  softcap: float | None, bq: int, bk: int, n_k: int,
+                  sq: int, skv: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (bq, Dh)
+    k = k_ref[0].astype(jnp.float32)                 # (bk, Dh)
+    v = v_ref[0].astype(jnp.float32)                 # (bk, Dv)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    iq = pl.program_id(1)
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (kpos < skv) & (qpos < sq)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _done():
+        o_ref[0, ...] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-37)
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bk",
+                     "interpret"))
+def flash_attention(
+    q: jnp.ndarray,            # (B, Sq, H, Dh)
+    k: jnp.ndarray,            # (B, Skv, KV, Dh)
+    v: jnp.ndarray,            # (B, Skv, KV, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+    bq: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Sq, H, Dh = q.shape
+    _, Skv, KV, Dv = v.shape
+    G = H // KV
+    if scale is None:
+        scale = 1.0 / (Dh ** 0.5)
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    # (B, S, H, D) -> (B*H, S, D) head-major for 2-D tiles
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dh)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, Dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, Dv)
+    pq, pk = (-Sq) % bq, (-Skv) % bk
+    if pq:
+        qh = jnp.pad(qh, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kh = jnp.pad(kh, ((0, 0), (0, pk), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pk), (0, 0)))
+    n_q, n_k = (Sq + pq) // bq, (Skv + pk) // bk
+
+    def q_map(bh, iq, ik):
+        return (bh, iq, 0)
+
+    # bh enumerates (b, h) pairs; its KV row is b*KV + h//G.
+    def kv_index(bh, iq, ik):
+        b = bh // H
+        h = bh % H
+        return (b * KV + h // G, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            softcap=softcap, bq=bq, bk=bk, n_k=n_k, sq=Sq, skv=Skv),
+        grid=(B * H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, Dh), q_map),
+            pl.BlockSpec((1, bk, Dh), kv_index),
+            pl.BlockSpec((1, bk, Dv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dv), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq + pq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dv), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    out = out[:, :Sq].reshape(B, H, Sq, Dv).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for attention (the ``ref.py`` contract).
+
+Direct softmax(Q·Kᵀ)·V with GQA head grouping, causal / sliding-window /
+cache-length masking and Gemma-style logit soft-capping. O(S²) memory —
+use only for oracle comparisons and small shapes; the model path uses
+:mod:`.blockwise` and the TPU path uses the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(
+    q: jnp.ndarray,            # (B, Sq, H, Dh)
+    k: jnp.ndarray,            # (B, Skv, KV, Dh)
+    v: jnp.ndarray,            # (B, Skv, KV, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int | jnp.ndarray = 0,
+    kv_len: jnp.ndarray | None = None,   # (B,) valid cache length
+    scale: float | None = None,
+) -> jnp.ndarray:
+    B, Sq, H, Dh = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(float(Dh))
+    qg = q.reshape(B, Sq, KV, G, Dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = q_offset + jnp.arange(Sq)                    # (Sq,)
+    kpos = jnp.arange(Skv)                              # (Skv,)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    mask = jnp.broadcast_to(mask[None], (B, Sq, Skv))
+    if kv_len is not None:
+        mask &= kpos[None, None, :] < kv_len[:, None, None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,60 @@
+"""Pallas TPU GEMM with explicit VMEM tiling.
+
+Output-stationary accumulation (the dataflow the paper's eq.-7 compute
+model assumes): grid (M/bm, N/bn, K/bk) with K innermost — each (i, j)
+tile's f32 accumulator lives in VMEM scratch across the K steps, and
+blocks are MXU-aligned multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 256, bn: int = 256,
+           bk: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """C = A @ B with (M, K) x (K, N); pads every dim to its block."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        a = jnp.pad(a, ((0, pm), (0, pk)))
+    if pk or pn:
+        b = jnp.pad(b, ((0, pk), (0, pn)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+    n_k = Kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(Mp // bm, Np // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:M, :N]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the GEMM kernel."""
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(a.dtype)

@@ -1,0 +1,81 @@
+"""Chunked RWKV-6 WKV in pure JAX — the XLA execution path.
+
+Within a chunk of length Lc, decay products are exp of cumulative-log-decay
+differences (≤ 0 ⇒ safe); the intra-chunk term is computed with an explicit
+(i, j, channel) tensor over a small chunk (Lc ≤ 64 keeps it cheap), and the
+state is carried across chunks with a scan. Matches :func:`..ref.wkv6_ref`
+to f32 tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_chunked(r, k, v, w, u, s0=None, chunk: int = 32):
+    B, S, H, K = r.shape
+    dtype_in = r.dtype
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-38, 1.0))  # (B,S,H,K) ≤0
+    u32 = u.astype(jnp.float32)
+
+    Lc = min(chunk, S)
+    pad = (-S) % Lc
+    if pad:
+        r32 = jnp.pad(r32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k32 = jnp.pad(k32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v32 = jnp.pad(v32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = r32.shape[1] // Lc
+
+    def to_chunks(t):
+        return t.reshape(B, nc, Lc, H, K).swapaxes(0, 1)
+
+    rc, kc, vc, lwc = map(to_chunks, (r32, k32, v32, lw))
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def chunk_step(s, inp):
+        rk, kk, vk, lwk = inp                      # (B,Lc,H,K)
+        cum = jnp.cumsum(lwk, axis=1)              # (B,Lc,H,K)
+        # S_{i-1} sees decay Π_{p=j+1..i-1} w_p = exp(cum_{i-1} − cum_j);
+        # shift cum to get cum_{i-1} with cum_{-1}=0.
+        cum_im1 = jnp.pad(cum, ((0, 0), (1, 0), (0, 0), (0, 0)))[:, :-1]
+        # intra-chunk: A[i,j] = Σ_c r_i[c]·exp(cum_{i-1}[c] − cum_j[c])·k_j[c]
+        diff = cum_im1[:, :, None] - cum[:, None, :, :, :]   # (B,i,j,H,K)
+        strict = jnp.tril(jnp.ones((Lc, Lc), bool), -1)
+        A = jnp.einsum("bihk,bijhk,bjhk->bijh", rk,
+                       jnp.where(strict[None, :, :, None, None],
+                                 jnp.exp(diff), 0.0), kk)
+        # bonus diagonal term: (r_i ∘ u ∘ k_i) · v_i
+        diag = jnp.einsum("bihk,hk,bihk->bih", rk, u32, kk)
+        y_intra = (jnp.einsum("bijh,bjhv->bihv", A, vk)
+                   + diag[..., None] * vk)
+        # inter-chunk: r_i ∘ exp(cum_{i-1}) · s
+        y_inter = jnp.einsum("bihk,bhkv->bihv", rk * jnp.exp(cum_im1), s)
+        # state update: s' = D(exp(cum_L)) s + Σ_j exp(cum_L − cum_j) k_j⊗v_j
+        decay_end = jnp.exp(cum[:, -1:] - cum)               # (B,Lc,H,K)
+        kv = jnp.einsum("bjhk,bjhv->bhkv", kk * decay_end, vk)
+        s_new = jnp.exp(cum[:, -1])[..., None] * s + kv
+        return s_new, y_intra + y_inter
+
+    # remat each chunk (same rationale as the SSD scan: recompute the
+    # (i, j, channel) decay tensor in backward rather than saving it).
+    from ..calibrate import scan_unroll
+    sT, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        s0, (rc, kc, vc, lwc), unroll=scan_unroll())
+    y = ys.swapaxes(0, 1).reshape(B, nc * Lc, H, K)[:, :S]
+    return y.astype(dtype_in), sT
+
+
+def wkv6_decode_step(s, r, k, v, w, u):
+    """Single-token WKV step. r/k/v/w (B,H,K), u (H,K); s (B,H,K,K)."""
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    w32 = w.astype(jnp.float32)
+    kv = k32[..., :, None] * v32[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r32,
+                   s + u.astype(jnp.float32)[None, :, :, None] * kv)
+    s_new = w32[..., :, None] * s + kv
+    return y.astype(r.dtype), s_new

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) WKV recurrence.
+
+Per head (K = V' = head dim), with data-dependent per-channel decay
+w_t ∈ (0,1) and bonus u:
+
+    y_t = r_t · (S_{t-1} + diag(u) · (k_t ⊗ v_t))
+    S_t = diag(w_t) · S_{t-1} + k_t ⊗ v_t
+
+Shapes: r/k/v/w (B,S,H,K), u (H,K); state S (B,H,K,K) [key-major].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    B, S, H, K = r.shape
+    r32, k32, v32, w32 = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                      # (B,H,K) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,K)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u32[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r32, k32, v32, w32))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), sT

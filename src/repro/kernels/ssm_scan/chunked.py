@@ -1,0 +1,90 @@
+"""Chunk-parallel Mamba-2 SSD in pure JAX — the XLA execution path.
+
+Splits the sequence into chunks of length Lc; within a chunk the output is
+an attention-like masked matmul (all decay exponents are differences of a
+monotone cumulative sum, hence ≤ 0 → numerically safe exp), and chunk
+states are carried by a scan. Matches :func:`..ref.ssm_scan_ref` to f32
+tolerance; the Pallas kernel mirrors this chunk decomposition with one
+grid step per (batch, chunk).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_chunked(x, dt, a, Bmat, Cmat, D, h0=None, chunk: int = 256):
+    Bsz, S, H, P = x.shape
+    G, N = Bmat.shape[2], Bmat.shape[3]
+    rep = H // G
+    dtype_in = x.dtype
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    B32 = jnp.repeat(Bmat.astype(jnp.float32), rep, axis=2)  # (B,S,H,N)
+    C32 = jnp.repeat(Cmat.astype(jnp.float32), rep, axis=2)
+    a32 = a.astype(jnp.float32)
+
+    Lc = min(chunk, S)
+    pad = (-S) % Lc
+    if pad:
+        x32 = jnp.pad(x32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt32 = jnp.pad(dt32, ((0, 0), (0, pad), (0, 0)))
+        B32 = jnp.pad(B32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C32 = jnp.pad(C32, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x32.shape[1] // Lc
+
+    def to_chunks(t):
+        return t.reshape((Bsz, nc, Lc) + t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, Bc, Cc = map(to_chunks, (x32, dt32, B32, C32))
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def chunk_step(h, inp):
+        xk, dk, Bk, Ck = inp     # (B,Lc,H,P),(B,Lc,H),(B,Lc,H,N),(B,Lc,H,N)
+        da = dk * a32[None, None, :]                 # (B,Lc,H) ≤ 0
+        cum = jnp.cumsum(da, axis=1)                 # (B,Lc,H)
+        # ---- intra-chunk (attention-like, lower-triangular)
+        # L[i,j] = exp(cum_i − cum_j) for i ≥ j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # (B,i,j,H)
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bihn,bjhn->bijh", Ck, Bk)           # (B,i,j,H)
+        W = CB * Lmat * dk[:, None, :, :]                    # weight on x_j
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, xk)
+        # ---- inter-chunk (contribution of the incoming state)
+        y_inter = jnp.einsum("bihn,bhpn->bihp", Ck * jnp.exp(
+            cum)[..., None], h)
+        # ---- state update
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)         # (B,Lc,H)
+        dB = (dk * decay_to_end)[..., None] * Bk             # (B,Lc,H,N)
+        h_new = (h * jnp.exp(cum[:, -1, :])[..., None, None]
+                 + jnp.einsum("bjhn,bjhp->bhpn", dB, xk))
+        return h_new, y_intra + y_inter
+
+    # remat each chunk: backward recomputes the intra-chunk decay/attention
+    # tensors, saving only the (small) inter-chunk states.
+    from ..calibrate import scan_unroll
+    hT, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        h0, (xc, dtc, Bc, Cc), unroll=scan_unroll())
+    y = ys.swapaxes(0, 1).reshape(Bsz, nc * Lc, H, P)[:, :S]
+    y = y + x32[:, :S] * D[None, None, :, None]
+    return y.astype(dtype_in), hT
+
+
+def ssm_decode_step(h, x, dt, a, Bmat, Cmat, D):
+    """Single-token state update for serving. x (B,H,P), dt (B,H),
+    Bmat/Cmat (B,G,N); returns (y (B,H,P), h_new)."""
+    G = Bmat.shape[1]
+    rep = x.shape[1] // G
+    Bh = jnp.repeat(Bmat.astype(jnp.float32), rep, axis=1)
+    Ch = jnp.repeat(Cmat.astype(jnp.float32), rep, axis=1)
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32 * a.astype(jnp.float32)[None, :])
+    h_new = (h * decay[..., None, None]
+             + (dt32[..., None] * x.astype(jnp.float32))[..., None]
+             * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch) + x * D[None, :, None]
+    return y.astype(x.dtype), h_new

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the Mamba-2 selective state-space scan (SSD).
+
+Sequential (per-timestep) recurrence — the obviously-correct oracle:
+
+    h_t = exp(dt_t · a_h) · h_{t-1} + dt_t · x_t ⊗ B_t
+    y_t = C_t · h_t + D_h · x_t
+
+Shapes follow Mamba-2: x (B,S,H,P), dt (B,S,H) [post-softplus], a (H,)
+[negative], Bmat/Cmat (B,S,G,N) with G state groups broadcast over heads,
+D (H,). Returns y (B,S,H,P) and the final state (B,H,P,N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, dt, a, Bmat, Cmat, D, h0=None):
+    Bsz, S, H, P = x.shape
+    G, N = Bmat.shape[2], Bmat.shape[3]
+    rep = H // G
+    x, dt = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bmat, Cmat = Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp               # (B,H,P),(B,H),(B,G,N),(B,G,N)
+        Bh = jnp.repeat(Bt, rep, axis=1)    # (B,H,N)
+        Ch = jnp.repeat(Ct, rep, axis=1)
+        decay = jnp.exp(dtt * a[None, :])   # (B,H)
+        h = (h * decay[..., None, None]
+             + (dtt[..., None] * xt)[..., None] * Bh[:, :, None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+        return h, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+          Bmat.swapaxes(0, 1), Cmat.swapaxes(0, 1))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + x * D[None, None, :, None]
+    return y.astype(x.dtype), hT

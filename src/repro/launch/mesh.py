@@ -1,0 +1,27 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — a 16×16 TPU-v5e pod, 256 chips.
+Multi-pod: (pod=2, data=16, model=16) — 512 chips; the "pod" axis is pure
+data parallelism (DCN between pods carries only gradient reductions).
+
+A FUNCTION, not a module constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, *, pod: bool = False):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    n = n_devices or len(jax.devices())
+    if pod and n >= 8:
+        return jax.make_mesh((2, 2, n // 4), ("pod", "data", "model"))
+    d = 2 if n % 2 == 0 and n >= 4 else 1
+    return jax.make_mesh((d, n // d), ("data", "model"))

@@ -1,0 +1,53 @@
+"""Serving driver: batched generation with the ServeEngine.
+
+CPU example:
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --reduced --requests 8 --new-tokens 12
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config
+from ..models import init_model
+from ..serve import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--capacity", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = init_model(cfg, jax.random.PRNGKey(args.seed))
+    engine = ServeEngine(cfg, params, batch_size=args.batch,
+                         capacity=args.capacity,
+                         temperature=args.temperature, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.integers(4, 17)).astype(np.int32)
+               for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    outs = engine.generate(prompts, max_new_tokens=args.new_tokens)
+    dt = time.perf_counter() - t0
+    total = sum(len(o) for o in outs)
+    print(f"[serve] {cfg.name}: {len(prompts)} requests, {total} tokens "
+          f"in {dt:.2f}s ({total/dt:.1f} tok/s incl. compile)")
+    for i, o in enumerate(outs[:4]):
+        print(f"  req{i}: {o}")
+    return outs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Abstract input/state specs for lowering — ShapeDtypeStruct stand-ins
+with shardings attached; no device allocation ever happens here."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from ..configs import SHAPE_DEFS
+from ..models import init_caches, init_model
+from ..sharding.partition_specs import (cache_shardings, data_specs,
+                                        param_shardings)
+from ..train import adamw
+from ..train.train_step import init_train_state
+
+
+def abstract(tree, shardings=None):
+    def one(x, s=None):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s)
+    if shardings is None:
+        return jax.tree.map(one, tree)
+    return jax.tree.map(one, tree, shardings)
+
+
+def input_specs(cfg, shape_name: str, mesh) -> dict:
+    """ShapeDtypeStructs for every model input of one (arch × shape) cell:
+    {tokens,...} for train/prefill; {tokens, pos} for decode."""
+    sd = SHAPE_DEFS[shape_name]
+    S, B = sd["seq_len"], sd["global_batch"]
+    kind = sd["kind"]
+    ds = data_specs(mesh)
+
+    def spec(shape, dtype, key):
+        return jax.ShapeDtypeStruct(
+            shape, dtype, sharding=NamedSharding(
+                mesh, _safe(ds[key], shape, mesh)))
+
+    batch = {}
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = spec((B, S, cfg.frontend_dim), jnp.bfloat16,
+                               "frames")
+        if kind == "train":
+            batch["mask"] = spec((B, S), jnp.bool_, "mask")
+            batch["labels"] = spec((B, S), jnp.int32, "labels")
+        return batch
+    if kind == "decode":
+        batch["tokens"] = spec((B, 1), jnp.int32, "tokens")
+        return batch
+    st = S - (cfg.frontend_tokens if cfg.frontend == "vision_stub" else 0)
+    batch["tokens"] = spec((B, st), jnp.int32, "tokens")
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = spec((B, cfg.frontend_tokens, cfg.frontend_dim),
+                                jnp.bfloat16, "patches")
+    return batch
+
+
+def _safe(spec, shape, mesh):
+    from ..sharding.logical import sanitize_spec
+    return sanitize_spec(spec, shape, mesh)
+
+
+def state_specs(cfg, mesh, optimizer=None, fsdp_axes=("data",)):
+    """Abstract train state with shardings (params + Adam moments share
+    the FSDP×TP layout; ZeRO by construction). ``fsdp_axes=("pod","data")``
+    extends the sharding across pods for models exceeding one pod's HBM."""
+    opt = optimizer or adamw()
+    shapes = jax.eval_shape(
+        lambda: init_train_state(
+            init_model(cfg, jax.random.PRNGKey(0)), opt))
+    shardings = {
+        "params": param_shardings(shapes["params"], mesh, fsdp_axes),
+        "opt": {
+            "m": param_shardings(shapes["opt"]["m"], mesh, fsdp_axes),
+            "v": param_shardings(shapes["opt"]["v"], mesh, fsdp_axes),
+            "count": NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        },
+        "step": NamedSharding(mesh, jax.sharding.PartitionSpec()),
+    }
+    return abstract(shapes, shardings), shardings
+
+
+def params_specs_only(cfg, mesh, fsdp_axes=("data",)):
+    shapes = jax.eval_shape(
+        lambda: init_model(cfg, jax.random.PRNGKey(0)))
+    sh = param_shardings(shapes, mesh, fsdp_axes)
+    return abstract(shapes, sh), sh
+
+
+def cache_specs(cfg, shape_name: str, mesh):
+    sd = SHAPE_DEFS[shape_name]
+    S, B = sd["seq_len"], sd["global_batch"]
+    shapes = jax.eval_shape(
+        lambda: init_caches(cfg, B, S, dtype=jnp.bfloat16))
+    sh = cache_shardings(shapes, cfg, mesh)
+    return abstract(shapes, sh), sh

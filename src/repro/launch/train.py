@@ -1,0 +1,110 @@
+"""Training driver with fault tolerance.
+
+CPU example (reduced config, debug mesh):
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --reduced --steps 50 --batch 8 --seq 128 --ckpt /tmp/ckpt
+
+On a real cluster the same entry point runs with --mesh single|multi and
+the full config; ``--restore auto`` resumes from the latest checkpoint
+(crash-restart semantics).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import Checkpointer
+from ..configs import SHAPE_DEFS, get_config
+from ..data.pipeline import make_pipeline
+from ..models import init_model
+from ..runtime import FaultTolerantLoop, StragglerMonitor
+from ..sharding.logical import use_rules
+from ..sharding.partition_specs import (activation_rules, data_specs,
+                                        param_shardings)
+from ..train import adamw, cosine_schedule
+from ..train.train_step import init_train_state, make_train_step
+from .mesh import make_debug_mesh, make_production_mesh
+
+
+def build(args):
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if args.mesh == "debug":
+        mesh = make_debug_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    shape_def = dict(seq_len=args.seq, global_batch=args.batch,
+                     kind="train")
+    opt = adamw(lr=cosine_schedule(args.lr, args.warmup, args.steps),
+                weight_decay=0.1)
+    step_fn = make_train_step(cfg, opt, accum_steps=args.accum)
+    rules = activation_rules(mesh, shard_residual=not args.reduced)
+    pipeline = make_pipeline(cfg, shape_def, seed=args.seed)
+    return cfg, mesh, opt, step_fn, rules, pipeline
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="debug",
+                    choices=["debug", "single", "multi"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--restore", default=None, choices=[None, "auto"])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg, mesh, opt, step_fn, rules, pipeline = build(args)
+    print(f"[train] {cfg.name} on mesh {dict(mesh.shape)} "
+          f"({mesh.size} devices)")
+
+    with use_rules(mesh, rules):
+        params = init_model(cfg, jax.random.PRNGKey(args.seed))
+        p_sh = param_shardings(jax.eval_shape(lambda: params), mesh)
+        params = jax.tree.map(jax.device_put, params, p_sh)
+        state = init_train_state(params, opt)
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+        ckpt = Checkpointer(args.ckpt) if args.ckpt else None
+        start = 0
+        if ckpt and args.restore == "auto" and ckpt.latest() is not None:
+            state, start = ckpt.restore()
+            state = jax.tree.map(jnp.asarray, state)
+            print(f"[train] restored step {start}")
+
+        losses = []
+
+        def logging_step(st, batch):
+            st, metrics = jit_step(st, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            losses.append(metrics["loss"])
+            n = len(losses)
+            if n % args.log_every == 0:
+                print(f"  step {start + n:>5}  loss "
+                      f"{np.mean(losses[-args.log_every:]):.4f}  "
+                      f"gnorm {metrics['grad_norm']:.3f}")
+            return st, metrics
+
+        loop = FaultTolerantLoop(logging_step, pipeline, ckpt,
+                                 ckpt_every=args.ckpt_every,
+                                 straggler=StragglerMonitor())
+        state, report = loop.run(state, start, args.steps)
+    print(f"[train] done: {report.steps_run} steps, "
+          f"{report.bad_steps} rejected, {report.stragglers} stragglers, "
+          f"final loss {report.losses[-1]:.4f} "
+          f"(first {report.losses[0]:.4f})")
+    return report
+
+
+if __name__ == "__main__":
+    main()

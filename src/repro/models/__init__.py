@@ -1,0 +1,9 @@
+"""JAX model zoo: ten assigned architectures behind one functional API.
+
+>>> cfg = get_config("gemma2-2b", reduced=True)
+>>> params = init_model(cfg, jax.random.PRNGKey(0))
+>>> logits, caches, aux = forward(params, cfg, {"tokens": tok})
+"""
+from .config import ModelConfig  # noqa: F401
+from .loss import lm_loss, masked_pred_loss  # noqa: F401
+from .transformer import forward, init_caches, init_model  # noqa: F401

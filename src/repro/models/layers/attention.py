@@ -1,0 +1,129 @@
+"""GQA attention layer with train / prefill / decode paths.
+
+KV cache is a ring buffer of capacity ``Smax`` (= window size for
+sliding-window archs, = max context otherwise). RoPE is applied to keys
+before caching, so ring rotation only affects masking, which is computed
+from reconstructed absolute slot positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels.flash_attention.blockwise import blockwise_attention
+from ...sharding.logical import shard
+from .common import dense_init, rms_norm, rope, softcap
+
+NEG_INF = -2.0e38
+
+
+def init_attn(key, cfg, d_in: int | None = None, d_out: int | None = None,
+              dtype=jnp.float32):
+    D = d_in or cfg.d_model
+    Do = d_out or cfg.d_model
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H, Dh), D, dtype),
+        "wk": dense_init(ks[1], (D, KV, Dh), D, dtype),
+        "wv": dense_init(ks[2], (D, KV, Dh), D, dtype),
+        "wo": dense_init(ks[3], (H, Dh, Do), H * Dh, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((Dh,), dtype)
+        p["k_norm"] = jnp.zeros((Dh,), dtype)
+    return p
+
+
+def init_cache(cfg, batch: int, capacity: int, dtype):
+    KV, Dh = cfg.n_kv_heads, cfg.d_head
+    return {
+        "k": jnp.zeros((batch, capacity, KV, Dh), dtype),
+        "v": jnp.zeros((batch, capacity, KV, Dh), dtype),
+    }
+
+
+def _prefill_cache(buf, kv):
+    """Write S freshly-computed entries into a ring buffer of capacity C.
+    S ≤ C: plain placement at slots 0..S−1 (absolute = slot). S > C: keep
+    the last C entries, rotated so entry at absolute position p sits in
+    slot p % C."""
+    S, C = kv.shape[1], buf.shape[1]
+    if S <= C:
+        return jax.lax.dynamic_update_slice(buf, kv.astype(buf.dtype),
+                                            (0, 0, 0, 0))
+    tail = kv[:, S - C:].astype(buf.dtype)
+    return jnp.roll(tail, shift=(S - C) % C, axis=1)
+
+
+def _ring_positions(capacity: int, pos):
+    """Absolute position held by each cache slot after writing ``pos``."""
+    s = jnp.arange(capacity)
+    return pos - jnp.mod(pos - s, capacity)
+
+
+def attn_apply(p, x, cfg, *, positions, window=None, cache=None, pos=None,
+               mode="train", causal=True, dtype=jnp.bfloat16):
+    """x (B, S, D_in) → (out (B, S, d_model), new_cache)."""
+    B, S, _ = x.shape
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    xq = x.astype(dtype)
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xq, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xq, p["wv"].astype(dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps, plus_one=True)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps, plus_one=True)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "act_bshd")
+
+    cap = cfg.attn_logit_softcap
+    new_cache = cache
+    if mode == "train":
+        out = blockwise_attention(
+            q, k, v, causal=causal, window=window, softcap=cap,
+            q_chunk=cfg.attn_chunk, kv_chunk=2 * cfg.attn_chunk)
+    elif mode == "prefill":
+        new_cache = {"k": shard(_prefill_cache(cache["k"], k), "cache"),
+                     "v": shard(_prefill_cache(cache["v"], v), "cache")}
+        out = blockwise_attention(
+            q, k, v, causal=causal, window=window, softcap=cap,
+            q_chunk=cfg.attn_chunk, kv_chunk=2 * cfg.attn_chunk)
+    elif mode == "decode":
+        capacity = cache["k"].shape[1]
+        slot = jnp.mod(pos, capacity)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype),
+            (0, slot.astype(jnp.int32), 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype),
+            (0, slot.astype(jnp.int32), 0, 0))
+        new_cache = {"k": shard(ck, "cache"), "v": shard(cv, "cache")}
+        out = _decode_attend(q, ck, cv, pos, capacity, window, cap)
+    else:
+        raise ValueError(mode)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(dtype),
+                     p["wo"].astype(dtype))
+    return shard(out, "act_btd"), new_cache
+
+
+def _decode_attend(q, ck, cv, pos, capacity, window, cap):
+    """Single-token attention over a ring-buffer cache."""
+    B, S, H, Dh = q.shape               # S == 1
+    KV = ck.shape[2]
+    G = H // KV
+    abs_pos = _ring_positions(capacity, pos)        # (cap,)
+    valid = abs_pos >= 0
+    valid &= abs_pos <= pos
+    if window is not None:
+        valid &= abs_pos > pos - window
+    qg = q.reshape(B, S, KV, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / jnp.sqrt(float(Dh))
+    s = softcap(s, cap)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, cv.astype(jnp.float32))
+    return out.reshape(B, S, H, Dh).astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Shared building blocks: norms, RoPE, activations, initializers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-5, plus_one: bool = False):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale.astype(jnp.float32)) if plus_one \
+        else scale.astype(jnp.float32)
+    return (y * s).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x,
+            approximate=True), "relu": jax.nn.relu}[name]
+
+
+def rope(x, positions, theta: float = 10000.0, rot_dim: int | None = None):
+    """Rotary embedding. x (..., S, H, D) rotates the first ``rot_dim``
+    dims (default: all). positions (..., S) or (S,)."""
+    D = x.shape[-1]
+    rd = rot_dim or D
+    assert rd % 2 == 0
+    x_rot, x_pass = x[..., :rd], x[..., rd:]
+    freqs = theta ** (-jnp.arange(0, rd, 2, dtype=jnp.float32) / rd)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, rd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def dense_init(key, shape, in_axis_size: int, dtype):
+    """Truncated-normal fan-in init."""
+    std = (1.0 / max(in_axis_size, 1)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def softcap(x, cap: float | None):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

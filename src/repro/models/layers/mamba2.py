@@ -1,0 +1,103 @@
+"""Mamba-2 block (fused in_proj, causal depthwise conv, SSD scan, gated
+RMSNorm, out_proj) with train / prefill / decode paths.
+
+Decode state: conv ring (last conv_k−1 inputs of the conv channels) plus
+the SSM state (B, H, P, N) — constant-size, which is what makes the
+``long_500k`` cell servable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels.ssm_scan.chunked import ssm_decode_step, ssm_scan_chunked
+from ...sharding.logical import shard
+from .common import dense_init, rms_norm
+
+G = 1  # state groups
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    D = cfg.d_model
+    di = cfg.d_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * di + 2 * G * N + H), D, dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), cfg.ssm_conv,
+                             dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.zeros((H,), dtype),
+        "D": jnp.ones((H,), dtype),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[3], (di, D), di, dtype),
+    }
+
+
+def init_mamba_state(cfg, batch: int, dtype):
+    di = cfg.d_inner
+    conv_dim = di + 2 * G * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), jnp.float32),
+    }
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv along time. xBC (B,S,Cc), w (K,Cc)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i][None, None, :]
+              for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else pad
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+def mamba2_apply(p, x, cfg, *, state=None, mode="train",
+                 dtype=jnp.bfloat16):
+    """x (B,S,D) → (out (B,S,D), new_state)."""
+    B, S, D = x.shape
+    di = cfg.d_inner
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x = x.astype(dtype)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dtype))
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    xBC = shard(xBC, "act_bti")
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"].astype(dtype),
+                                 p["conv_b"].astype(dtype), conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if mode == "decode":
+        y, new_ssm = ssm_decode_step(
+            state["ssm"], xs[:, 0], dt[:, 0], a, Bm[:, 0], Cm[:, 0],
+            p["D"].astype(jnp.float32))
+        y = y[:, None]
+    else:
+        h0 = None if state is None else state["ssm"]
+        y, new_ssm = ssm_scan_chunked(xs, dt, a, Bm, Cm,
+                                      p["D"].astype(jnp.float32), h0=h0,
+                                      chunk=cfg.ssm_chunk)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dtype),
+                 p["norm"], cfg.norm_eps, plus_one=True)
+    out = jnp.einsum("bsi,id->bsd", y.astype(dtype),
+                     p["out_proj"].astype(dtype))
+    new_state = None
+    if mode in ("prefill", "decode"):
+        cdt = state["conv"].dtype if state is not None else new_conv.dtype
+        new_state = {"conv": new_conv.astype(cdt), "ssm": new_ssm}
+    return shard(out, "act_btd"), new_state

@@ -1,0 +1,129 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3) — absorbed form.
+
+The KV cache stores only the compressed latent ``c_kv`` (kv_lora_rank) and
+the decoupled RoPE key (qk_rope_dim): the paper's memory saving. Scores
+are computed in the latent space by absorbing W^UK into the query
+("absorbed" inference form), making attention effectively MQA with
+k-dim = kv_lora + rope and v-dim = kv_lora:
+
+    q_abs = q_nope · W^UK          (B,S,H,kv_lora)
+    score = (q_abs·c_kv + q_rope·k_rope) / sqrt(qk_nope + qk_rope)
+    ctx   = softmax(score) · c_kv  (B,S,H,kv_lora)
+    out   = (ctx · W^UV) · W^O
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels.flash_attention.blockwise import blockwise_attention
+from ...sharding.logical import shard
+from .common import dense_init, rms_norm, rope
+
+NEG_INF = -2.0e38
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    D, H = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p = {}
+    if r_q:
+        p["wq_a"] = dense_init(ks[0], (D, r_q), D, dtype)
+        p["q_a_norm"] = jnp.zeros((r_q,), dtype)
+        p["wq_b"] = dense_init(ks[1], (r_q, H, dn + dr), r_q, dtype)
+    else:
+        p["wq"] = dense_init(ks[1], (D, H, dn + dr), D, dtype)
+    p["wkv_a"] = dense_init(ks[2], (D, r_kv + dr), D, dtype)
+    p["kv_a_norm"] = jnp.zeros((r_kv,), dtype)
+    p["wk_b"] = dense_init(ks[3], (r_kv, H, dn), r_kv, dtype)
+    p["wv_b"] = dense_init(ks[4], (r_kv, H, dv), r_kv, dtype)
+    p["wo"] = dense_init(ks[5], (H, dv, D), H * dv, dtype)
+    return p
+
+
+def init_mla_cache(cfg, batch: int, capacity: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, capacity, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, capacity, cfg.qk_rope_dim), dtype),
+    }
+
+
+def _latents(p, x, cfg, positions, dtype):
+    """q_abs (B,S,H,r_kv), q_rope (B,S,H,dr), c_kv (B,S,r_kv),
+    k_rope (B,S,dr)."""
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        qa = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dtype))
+        qa = rms_norm(qa, p["q_a_norm"], cfg.norm_eps, plus_one=True)
+        q = jnp.einsum("bsr,rhk->bshk", qa, p["wq_b"].astype(dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    # absorb W^UK into the query
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, p["wk_b"].astype(dtype))
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dtype))
+    c_kv = rms_norm(kv[..., : cfg.kv_lora_rank], p["kv_a_norm"],
+                    cfg.norm_eps, plus_one=True)
+    k_rope = kv[..., cfg.kv_lora_rank:]
+    k_rope = rope(k_rope[:, :, None, :], positions,
+                  cfg.rope_theta)[:, :, 0, :]
+    return q_abs, q_rope, c_kv, k_rope
+
+
+def mla_apply(p, x, cfg, *, positions, cache=None, pos=None, mode="train",
+              dtype=jnp.bfloat16):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    scale = 1.0 / jnp.sqrt(float(dn + dr))
+    x = x.astype(dtype)
+    q_abs, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions, dtype)
+
+    new_cache = cache
+    if mode in ("train", "prefill"):
+        if mode == "prefill":
+            ckv = jax.lax.dynamic_update_slice(
+                cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, 0, 0))
+            krp = jax.lax.dynamic_update_slice(
+                cache["krope"], k_rope.astype(cache["krope"].dtype),
+                (0, 0, 0))
+            new_cache = {"ckv": shard(ckv, "cache_mla"), "krope": krp}
+        # MQA in latent space: k = [c_kv, k_rope] (KV=1), v = c_kv.
+        q_cat = jnp.concatenate([q_abs, jnp.broadcast_to(
+            q_rope, (B, S, H, dr))], axis=-1)
+        k_cat = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
+        ctx = blockwise_attention(
+            q_cat, k_cat, c_kv[:, :, None, :], causal=True,
+            q_chunk=cfg.attn_chunk, kv_chunk=2 * cfg.attn_chunk,
+            scale=scale)
+    elif mode == "decode":
+        capacity = cache["ckv"].shape[1]
+        slot = jnp.mod(pos, capacity).astype(jnp.int32)
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, slot, 0))
+        krp = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype),
+            (0, slot, 0))
+        new_cache = {"ckv": shard(ckv, "cache_mla"), "krope": krp}
+        abs_pos = pos - jnp.mod(pos - jnp.arange(capacity), capacity)
+        valid = (abs_pos >= 0) & (abs_pos <= pos)
+        s = (jnp.einsum("bqhr,bsr->bhqs", q_abs.astype(jnp.float32),
+                        ckv.astype(jnp.float32))
+             + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                          krp.astype(jnp.float32))) * scale
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        pr = jnp.exp(s - s.max(axis=-1, keepdims=True))
+        pr = pr / pr.sum(axis=-1, keepdims=True)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", pr, ckv.astype(jnp.float32)
+                         ).astype(dtype)
+    else:
+        raise ValueError(mode)
+
+    v = jnp.einsum("bshr,rhv->bshv", ctx.astype(dtype),
+                   p["wv_b"].astype(dtype))
+    out = jnp.einsum("bshv,hvd->bsd", v, p["wo"].astype(dtype))
+    return shard(out, "act_btd"), new_cache

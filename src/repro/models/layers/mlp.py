@@ -1,0 +1,109 @@
+"""Gated MLP (SwiGLU / GeGLU) and top-k Mixture-of-Experts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...sharding.logical import shard
+from .common import act_fn, dense_init
+
+
+def init_mlp(key, d_in: int, d_ff: int, d_out: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_in, d_ff), d_in, dtype),
+        "w_up": dense_init(ks[1], (d_in, d_ff), d_in, dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_out), d_ff, dtype),
+    }
+
+
+def mlp_apply(p, x, act: str = "silu", dtype=jnp.bfloat16):
+    x = x.astype(dtype)
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dtype))
+    h = shard(act_fn(act)(g) * u, "act_btf")
+    return shard(jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dtype)),
+                 "act_btd")
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts: top-k routing with *group-wise* capacity-based dense
+# dispatch (tokens are split into fixed-size groups, each with its own
+# expert capacity — keeps the one-hot dispatch tensor O(T·K·cf) instead of
+# O(T²·K·cf/E), the standard MaxText formulation). Deterministic and
+# shardable: experts → "model", token groups → "data". Shared experts
+# (DeepSeek-V2) run densely on all tokens.
+# --------------------------------------------------------------------------
+def init_moe(key, cfg, dtype=jnp.float32):
+    D, F = cfg.d_model, cfg.moe_d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), D, dtype),
+        "w_gate": dense_init(ks[1], (E, D, F), D, dtype),
+        "w_up": dense_init(ks[2], (E, D, F), D, dtype),
+        "w_down": dense_init(ks[3], (E, F, D), F, dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], D, F * cfg.n_shared_experts, D, dtype)
+    return p
+
+
+def moe_apply(p, x, cfg, *, capacity_factor: float | None = None,
+              group_size: int = 256, dtype=jnp.bfloat16):
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.moe_top_k
+    T = B * S
+    cf = capacity_factor or cfg.moe_capacity_factor
+    xt = x.reshape(T, D).astype(dtype)
+
+    # group-wise dispatch: fixed-size token groups each with their own
+    # expert capacity keep the one-hot tensors O(T*K*cf); a single
+    # dropless group for decode/tiny batches.
+    gs = T if T <= 256 else min(group_size, T)
+    pad = (-T) % gs
+    xg = jnp.pad(xt, ((0, pad), (0, 0))) if pad else xt
+    G = xg.shape[0] // gs
+    xg = shard(xg.reshape(G, gs, D), "moe_gtd")
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if pad:
+        valid = (jnp.arange(G * gs) < T).reshape(G, gs)
+        probs = probs * valid[..., None]
+    gate_vals, sel = jax.lax.top_k(probs, K)              # (G,gs,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = gs * K if T <= 256 else max(1, int(cf * gs * K / E))
+    onehot = jax.nn.one_hot(sel, E, dtype=jnp.int32)      # (G,gs,K,E)
+    flat = onehot.reshape(G, gs * K, E)
+    ranks = (jnp.cumsum(flat, axis=1) - flat).reshape(G, gs, K, E)
+    rank_sel = (ranks * onehot).sum(-1)                   # (G,gs,K)
+    keep = rank_sel < C
+    disp = (onehot * keep[..., None]).astype(dtype)       # (G,gs,K,E)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, rank_sel, C), C + 1,
+                            dtype=dtype)[..., :C]         # (G,gs,K,C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", disp, pos_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", disp, pos_oh,
+                         gate_vals.astype(dtype))
+
+    ex_in = shard(jnp.einsum("gtd,gtec->gecd", xg, dispatch), "moe_ecd")
+    g = jnp.einsum("gecd,edf->gecf", ex_in, p["w_gate"].astype(dtype))
+    u = jnp.einsum("gecd,edf->gecf", ex_in, p["w_up"].astype(dtype))
+    h = shard(act_fn(cfg.act)(g) * u, "moe_ecf")
+    ex_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dtype))
+    out = jnp.einsum("gecd,gtec->gtd", ex_out, combine)
+    out = out.reshape(G * gs, D)[:T]
+
+    out = out.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        # run shared experts on the (B, S, D) layout so the batch dim
+        # keeps its data sharding (a (1, T, D) view cannot shard)
+        out = out + mlp_apply(p["shared"], x.astype(dtype), cfg.act, dtype)
+    # router aux load-balancing loss surface
+    me = probs.reshape(G * gs, E).mean(axis=0)
+    ce = onehot.reshape(G * gs, K, E).sum(1).astype(
+        jnp.float32).mean(axis=0) / K
+    aux = (me * ce).sum() * E
+    return shard(out, "act_btd"), aux

@@ -1,0 +1,142 @@
+"""RWKV-6 (Finch) block: data-dependent token-shift mixing, WKV recurrence
+with per-channel data-dependent decay, and the squared-ReLU channel mix.
+
+Decode state per block: last hidden token for the two token-shifts plus
+the WKV state (B, H, K, K) — constant-size (attention-free long context).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...kernels.rwkv6.chunked import wkv6_chunked, wkv6_decode_step
+from ...sharding.logical import shard
+from .common import dense_init
+
+_MIX = ("r", "k", "v", "g", "w")
+
+
+def init_rwkv6(key, cfg, dtype=jnp.float32):
+    D = cfg.d_model
+    F = cfg.d_ff
+    r_lo = cfg.rwkv_decay_lora
+    m_lo = cfg.rwkv_mix_lora
+    ks = jax.random.split(key, 16)
+    p = {
+        # time mix
+        "mu_base": jnp.full((len(_MIX), D), 0.5, dtype),
+        "mix_A": dense_init(ks[0], (D, len(_MIX) * m_lo), D, dtype),
+        "mix_B": dense_init(ks[1], (len(_MIX), m_lo, D), m_lo, dtype),
+        "wr": dense_init(ks[2], (D, D), D, dtype),
+        "wk": dense_init(ks[3], (D, D), D, dtype),
+        "wv": dense_init(ks[4], (D, D), D, dtype),
+        "wg": dense_init(ks[5], (D, D), D, dtype),
+        "w0": jnp.full((D,), -4.0, dtype),       # base decay (w≈exp(-e^-4))
+        "decay_A": dense_init(ks[6], (D, r_lo), D, dtype),
+        "decay_B": dense_init(ks[7], (r_lo, D), r_lo, dtype),
+        "u": dense_init(ks[8], (cfg.rwkv_heads, cfg.rwkv_head_dim),
+                        cfg.rwkv_head_dim, dtype),
+        "ln_x": jnp.ones((D,), dtype),
+        "wo": dense_init(ks[9], (D, D), D, dtype),
+        # channel mix
+        "cmix_mu": jnp.full((2, D), 0.5, dtype),
+        "ck": dense_init(ks[10], (D, F), D, dtype),
+        "cv": dense_init(ks[11], (F, D), F, dtype),
+        "cr": dense_init(ks[12], (D, D), D, dtype),
+    }
+    return p
+
+
+def init_rwkv_state(cfg, batch: int, dtype):
+    D = cfg.d_model
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "shift_t": jnp.zeros((batch, D), dtype),   # time-mix shift
+        "shift_c": jnp.zeros((batch, D), dtype),   # channel-mix shift
+        "wkv": jnp.zeros((batch, H, K, K), jnp.float32),
+    }
+
+
+def _token_shift(x, last):
+    """x (B,S,D) → previous token (B,S,D); ``last`` seeds position 0."""
+    prev = jnp.concatenate([last[:, None, :].astype(x.dtype),
+                            x[:, :-1]], axis=1)
+    return prev
+
+
+def rwkv6_time_mix(p, x, cfg, *, state=None, mode="train",
+                   dtype=jnp.bfloat16):
+    B, S, D = x.shape
+    H, K = cfg.rwkv_heads, cfg.rwkv_head_dim
+    x = x.astype(dtype)
+    last = (jnp.zeros((B, D), dtype) if state is None
+            else state["shift_t"])
+    prev = _token_shift(x, last)
+    dxp = prev - x
+    # data-dependent mixing (LoRA over the 5 mixes)
+    lora = jnp.tanh(jnp.einsum("bsd,dm->bsm", x + 0.5 * dxp,
+                               p["mix_A"].astype(dtype)))
+    lora = lora.reshape(B, S, len(_MIX), -1)
+    mix = (p["mu_base"].astype(dtype)[None, None]
+           + jnp.einsum("bsnm,nmd->bsnd", lora, p["mix_B"].astype(dtype)))
+    xm = x[:, :, None, :] + dxp[:, :, None, :] * mix      # (B,S,5,D)
+    xr, xk, xv, xg, xw = (xm[:, :, i] for i in range(len(_MIX)))
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dtype))
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dtype))
+    ww = (p["w0"].astype(jnp.float32)
+          + jnp.einsum("bsd,dr,re->bse", xw.astype(jnp.float32),
+                       p["decay_A"].astype(jnp.float32),
+                       p["decay_B"].astype(jnp.float32)))
+    w = jnp.exp(-jnp.exp(ww))                              # (0,1)
+
+    hsplit = lambda t: t.reshape(B, S, H, K)
+    rh, kh, vh, wh = map(hsplit, (r, k, v, w.astype(dtype)))
+    if mode == "decode":
+        y, new_wkv = wkv6_decode_step(state["wkv"], rh[:, 0], kh[:, 0],
+                                      vh[:, 0], wh[:, 0], p["u"])
+        y = y[:, None]
+    else:
+        s0 = None if state is None else state["wkv"]
+        y, new_wkv = wkv6_chunked(rh, kh, vh, wh, p["u"], s0=s0,
+                                  chunk=cfg.ssm_chunk)
+    y = y.reshape(B, S, D)
+    # group norm over heads approximated by rms over D (standard in jax
+    # ports), then output gate
+    y32 = y.astype(jnp.float32)
+    y = (y32 * jax.lax.rsqrt(jnp.mean(y32 * y32, -1, keepdims=True)
+                             + cfg.norm_eps)
+         * p["ln_x"].astype(jnp.float32)).astype(dtype)
+    out = jnp.einsum("bsd,de->bse", y * jax.nn.silu(g),
+                     p["wo"].astype(dtype))
+    new_state = None
+    if mode in ("prefill", "decode"):
+        sdt = x.dtype if state is None else state["shift_t"].dtype
+        new_state = {"shift_t": x[:, -1].astype(sdt), "wkv": new_wkv}
+    return shard(out, "act_btd"), new_state
+
+
+def rwkv6_channel_mix(p, x, cfg, *, state=None, mode="train",
+                      dtype=jnp.bfloat16):
+    B, S, D = x.shape
+    x = x.astype(dtype)
+    last = (jnp.zeros((B, D), dtype) if state is None
+            else state["shift_c"])
+    prev = _token_shift(x, last)
+    dxp = prev - x
+    mu = p["cmix_mu"].astype(dtype)
+    xk = x + dxp * mu[0][None, None]
+    xr = x + dxp * mu[1][None, None]
+    k = jnp.einsum("bsd,df->bsf", xk, p["ck"].astype(dtype))
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("bsf,fd->bsd", shard(k, "act_btf"),
+                   p["cv"].astype(dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                  p["cr"].astype(dtype)))
+    new_state = None
+    if mode in ("prefill", "decode"):
+        sdt = x.dtype if state is None else state["shift_c"].dtype
+        new_state = {"shift_c": x[:, -1].astype(sdt)}
+    return shard(r * v, "act_btd"), new_state

@@ -1,0 +1,90 @@
+"""Training losses: next-token LM cross-entropy and HuBERT-style masked
+prediction. Cross-entropy is computed from log-softmax in f32 with the
+padded-vocab entries already masked by the model head.
+
+``fused_lm_loss`` is the memory-efficient training path: it consumes the
+final *hidden* states and the unembedding matrix and scans over sequence
+chunks (rematerialized), so the (B, S, vocab) logits tensor — 4+ GiB/device
+in f32 for a 256k vocab — never exists."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.logical import shard
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def lm_loss(logits, tokens, loss_mask=None):
+    """Next-token prediction: logits (B,S,V) predict tokens shifted by 1.
+    ``loss_mask`` (B,S) marks positions whose *predictions* count (e.g.
+    text-only for VLM)."""
+    lg = logits[:, :-1]
+    tg = tokens[:, 1:]
+    ls = _xent(lg, tg)
+    if loss_mask is not None:
+        m = loss_mask[:, 1:].astype(jnp.float32)
+    else:
+        m = jnp.ones_like(ls)
+    return (ls * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def masked_pred_loss(logits, labels, mask):
+    """Encoder masked prediction: CE only on masked frames."""
+    ls = _xent(logits, labels)
+    m = mask.astype(jnp.float32)
+    return (ls * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def fused_lm_loss(hidden, head, targets, *, mask=None,
+                  final_softcap=None, vocab_size=None, chunk: int = 512,
+                  shift: bool = True):
+    """Chunked CE over hidden states: per-position loss for predicting
+    ``targets`` (already aligned: position i predicts targets[i]).
+
+    hidden (B,S,D), head (D,Vp), targets (B,S), mask (B,S) or None.
+    ``shift=True`` applies the standard next-token shift internally.
+    """
+    if shift:
+        hidden = hidden[:, :-1]
+        targets = targets[:, 1:]
+        mask = None if mask is None else mask[:, 1:]
+    B, S, D = hidden.shape
+    Vp = head.shape[-1]
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = hidden.shape[1] // c
+
+    def piece(carry, xs):
+        h, t, m = xs                                  # (B,c,D),(B,c),(B,c)
+        lg = jnp.einsum("bsd,dv->bsv", h, head).astype(jnp.float32)
+        lg = shard(lg, "logits")
+        if final_softcap is not None:
+            lg = final_softcap * jnp.tanh(lg / final_softcap)
+        if vocab_size is not None and vocab_size != Vp:
+            lg = jnp.where(jnp.arange(Vp)[None, None] >= vocab_size,
+                           -1e9, lg)
+        ls = _xent(lg, t)
+        tot, cnt = carry
+        return (tot + (ls * m).sum(), cnt + m.sum()), None
+
+    def chunks(x):
+        return x.reshape((B, n, c) + x.shape[2:]).swapaxes(0, 1)
+
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(piece,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (chunks(hidden), chunks(targets), chunks(mask)))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,428 @@
+"""Model assembly for all assigned families.
+
+Functional style: ``init_model(cfg, key) → params`` (nested dicts of
+arrays, layers *stacked* on a leading axis) and
+``forward(params, cfg, batch, mode, caches, pos) → (logits, caches, aux)``.
+
+Layer stacks run under ``jax.lax.scan`` (compact HLO at 48–62 layers, which
+is what makes the 512-device dry-run compile tractable) with optional
+``jax.checkpoint`` remat. Families:
+
+  dense / vlm / audio : [attn | MLA] + MLP blocks (gemma2 alternates
+                        local/global pairs inside one scan step)
+  moe                 : attn + top-k MoE (optional leading dense layers)
+  hybrid (zamba2)     : Mamba-2 backbone; one *shared-weight* attention
+                        block (on concat(hidden, embed₀)) every k blocks
+  ssm (rwkv6)         : RWKV-6 time-mix + channel-mix blocks
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.logical import shard
+from .config import ModelConfig
+from .layers.attention import attn_apply, init_attn, init_cache
+from .layers.common import dense_init, rms_norm, softcap
+from .layers.mamba2 import init_mamba2, init_mamba_state, mamba2_apply
+from .layers.mla import init_mla, init_mla_cache, mla_apply
+from .layers.mlp import init_mlp, init_moe, mlp_apply, moe_apply
+from .layers.rwkv6 import (init_rwkv6, init_rwkv_state, rwkv6_channel_mix,
+                           rwkv6_time_mix)
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, moe: bool, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+         "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.attn_type == "mla":
+        p["attn"] = init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = init_attn(ks[0], cfg, dtype=dtype)
+    if moe:
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.d_model,
+                            dtype)
+    if cfg.local_global_period:   # gemma2 post-norms
+        p["ln1b"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ln2b"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def _init_shared_attn(key, cfg: ModelConfig, dtype):
+    """Zamba2 shared block operating on concat(hidden, embed0) = 2·D."""
+    D2 = 2 * cfg.d_model
+    ks = jax.random.split(key, 4)
+    sub = cfg.replace(d_head=D2 // cfg.n_heads)
+    return {
+        "ln1": jnp.zeros((D2,), dtype),
+        "attn": init_attn(ks[0], sub, d_in=D2, d_out=D2, dtype=dtype),
+        "ln2": jnp.zeros((D2,), dtype),
+        "mlp": init_mlp(ks[1], D2, cfg.d_ff, D2, dtype),
+        "down": dense_init(ks[2], (D2, cfg.d_model), D2, dtype),
+    }
+
+
+def init_model(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    Vp, D = cfg.padded_vocab, cfg.d_model
+    params: dict = {
+        "embed": dense_init(ks[0], (Vp, D), D, dtype) * D ** 0.5,
+        "final_norm": jnp.zeros((D,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (D, Vp), D, dtype)
+    if cfg.frontend == "vision_stub":
+        params["patch_proj"] = dense_init(ks[2], (cfg.frontend_dim, D),
+                                          cfg.frontend_dim, dtype)
+    if cfg.frontend == "audio_stub":
+        params["frame_proj"] = dense_init(ks[2], (cfg.frontend_dim, D),
+                                          cfg.frontend_dim, dtype)
+        params["mask_emb"] = dense_init(ks[3], (D,), D, dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        per = max(cfg.local_global_period, 1)
+        n_steps = cfg.n_layers // per
+        keys = jax.random.split(ks[4], n_steps)
+        if cfg.local_global_period:
+            init_one = lambda k: {
+                "local": _init_block(jax.random.fold_in(k, 0), cfg, False,
+                                     dtype),
+                "global": _init_block(jax.random.fold_in(k, 1), cfg, False,
+                                      dtype)}
+        else:
+            init_one = lambda k: _init_block(k, cfg, False, dtype)
+        params["blocks"] = jax.vmap(init_one)(keys)
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            dk = jax.random.split(ks[5], nd)
+            params["dense_blocks"] = jax.vmap(
+                lambda k: _init_block(k, cfg.replace(moe_d_ff=0), False,
+                                      dtype))(dk)
+        keys = jax.random.split(ks[4], cfg.n_layers - nd)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_block(k, cfg, True, dtype))(keys)
+    elif fam == "hybrid":
+        keys = jax.random.split(ks[4], cfg.n_layers)
+        mb = jax.vmap(lambda k: {
+            "ln": jnp.zeros((D,), dtype),
+            "mamba": init_mamba2(k, cfg, dtype)})(keys)
+        per = cfg.hybrid_attn_period
+        n_groups = cfg.n_layers // per
+        params["blocks"] = jax.tree.map(
+            lambda a: a.reshape((n_groups, per) + a.shape[1:]), mb)
+        params["shared_attn"] = _init_shared_attn(ks[5], cfg, dtype)
+    elif fam == "ssm":
+        keys = jax.random.split(ks[4], cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: {
+            "ln1": jnp.zeros((D,), dtype),
+            "time": init_rwkv6(k, cfg, dtype),
+            "ln2": jnp.zeros((D,), dtype)})(keys)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, capacity: int,
+                dtype=jnp.bfloat16) -> dict:
+    """Serving state for the whole model (stacked along the scan axis)."""
+    fam = cfg.family
+
+    def stack(n, one):
+        return jax.tree.map(lambda x: jnp.broadcast_to(
+            x, (n,) + x.shape), one)
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        if cfg.is_encoder:
+            return {}
+        if cfg.attn_type == "mla":
+            one = init_mla_cache(cfg, batch, capacity, dtype)
+        else:
+            cap = capacity if cfg.window is None else min(capacity,
+                                                          cfg.window)
+            if cfg.local_global_period:
+                one = {
+                    "local": init_cache(cfg, batch,
+                                        min(capacity, cfg.window), dtype),
+                    "global": init_cache(cfg, batch, capacity, dtype)}
+                return {"layers": stack(
+                    cfg.n_layers // cfg.local_global_period, one)}
+            one = init_cache(cfg, batch, cap, dtype)
+        n = cfg.n_layers - cfg.first_dense_layers
+        out = {"layers": stack(n, one)}
+        if cfg.first_dense_layers:
+            out["dense_layers"] = stack(cfg.first_dense_layers, one)
+        return out
+    if fam == "hybrid":
+        per = cfg.hybrid_attn_period
+        n_groups = cfg.n_layers // per
+        mstate = init_mamba_state(cfg, batch, dtype)
+        # shared attention runs at width 2D with its own window-capped cache
+        sub = cfg.replace(d_head=2 * cfg.d_model // cfg.n_heads)
+        acap = min(capacity, cfg.window or capacity)
+        acache = init_cache(sub, batch, acap, dtype)
+        return {"mamba": stack(n_groups, stack(per, mstate)),
+                "shared": stack(n_groups, acache)}
+    if fam == "ssm":
+        return {"layers": stack(cfg.n_layers,
+                                init_rwkv_state(cfg, batch, dtype))}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _block_apply(p, x, cfg, *, positions, window, cache, pos, mode, dtype,
+                 moe: bool):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps, plus_one=True)
+    if cfg.attn_type == "mla":
+        a, new_cache = mla_apply(p["attn"], h, cfg, positions=positions,
+                                 cache=cache, pos=pos, mode=mode,
+                                 dtype=dtype)
+    else:
+        a, new_cache = attn_apply(p["attn"], h, cfg, positions=positions,
+                                  window=window, cache=cache, pos=pos,
+                                  mode=mode, causal=not cfg.is_encoder,
+                                  dtype=dtype)
+    if "ln1b" in p:
+        a = rms_norm(a, p["ln1b"], cfg.norm_eps, plus_one=True)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps, plus_one=True)
+    aux = 0.0
+    if moe:
+        m, aux = moe_apply(p["moe"], h, cfg, dtype=dtype)
+    else:
+        m = mlp_apply(p["mlp"], h, cfg.act, dtype=dtype)
+    if "ln2b" in p:
+        m = rms_norm(m, p["ln2b"], cfg.norm_eps, plus_one=True)
+    return x + m, new_cache, aux
+
+
+def _scan_blocks(body, x0, stacked_params, stacked_caches, cfg, mode):
+    """Scan ``body`` over the stacked layer axis, threading caches.
+
+    ``cfg.scan_layers=False`` unrolls to a python loop — used by the
+    roofline calibration lowers (XLA's cost analysis counts while-loop
+    bodies once, so scanned graphs under-report FLOPs by the trip count).
+    """
+    use_cache = stacked_caches is not None
+
+    if not cfg.scan_layers:
+        n = jax.tree.leaves(stacked_params)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        new_cs = []
+        x = x0
+        for i in range(n):
+            bp = jax.tree.map(lambda a: a[i], stacked_params)
+            bc = None if not use_cache else jax.tree.map(
+                lambda a: a[i], stacked_caches)
+            x, nc, a = body(bp, x, bc)
+            aux = aux + a
+            new_cs.append(nc)
+        stacked = None
+        if use_cache:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cs)
+        return x, stacked, aux
+
+    def step(carry, xs):
+        if use_cache:
+            bp, bc = xs
+        else:
+            bp, bc = xs, None
+        x, aux = carry
+        x, new_c, a = body(bp, x, bc)
+        return (x, aux + a), new_c
+
+    if cfg.remat and mode == "train":
+        step = jax.checkpoint(step,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (stacked_params, stacked_caches) if use_cache else stacked_params
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux), new_caches = jax.lax.scan(step, (x0, aux0), xs)
+    return x, (new_caches if use_cache else None), aux
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict, mode: str,
+                 pos, dtype):
+    """Token/frontend embedding → (x (B,S,D), positions, loss_mask)."""
+    if cfg.frontend == "audio_stub":
+        x = jnp.einsum("btf,fd->btd", batch["frames"].astype(dtype),
+                       params["frame_proj"].astype(dtype))
+        if "mask" in batch:
+            m = batch["mask"][..., None]
+            x = jnp.where(m, params["mask_emb"].astype(dtype)[None, None],
+                          x)
+        B, S = x.shape[:2]
+        positions = jnp.arange(S)[None, :]
+        return shard(x, "act_btd"), positions, None
+    tok = batch["tokens"]
+    B, S = tok.shape
+    x = jnp.take(params["embed"], tok, axis=0).astype(dtype)
+    if cfg.emb_scale_by_sqrt_dim:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    loss_mask = None
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        pe = jnp.einsum("bnf,fd->bnd", batch["patches"].astype(dtype),
+                        params["patch_proj"].astype(dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+        Np = pe.shape[1]
+        loss_mask = jnp.concatenate(
+            [jnp.zeros((B, Np), bool), jnp.ones((B, S), bool)], axis=1)
+        S = S + Np
+    if mode == "decode":
+        positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    else:
+        positions = jnp.arange(S)[None, :]
+    return shard(x, "act_btd"), positions, loss_mask
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, mode: str = "train",
+            caches: dict | None = None, pos=None,
+            output: str = "logits"):
+    """Returns (logits, new_caches, (aux, loss_mask)).
+
+    ``output="hidden"`` returns ((hidden, head), ...) instead — the fused
+    training-loss path that never materializes (B, S, vocab) logits."""
+    dtype = jnp.dtype(cfg.dtype)
+    x, positions, loss_mask = embed_inputs(params, cfg, batch, mode, pos,
+                                           dtype)
+    fam = cfg.family
+    aux = 0.0
+
+    if fam in ("dense", "vlm", "audio"):
+        if cfg.local_global_period:
+            def body(bp, x, bc):
+                x, c1, a1 = _block_apply(
+                    bp["local"], x, cfg, positions=positions,
+                    window=cfg.window,
+                    cache=None if bc is None else bc["local"], pos=pos,
+                    mode=mode, dtype=dtype, moe=False)
+                x, c2, a2 = _block_apply(
+                    bp["global"], x, cfg, positions=positions, window=None,
+                    cache=None if bc is None else bc["global"], pos=pos,
+                    mode=mode, dtype=dtype, moe=False)
+                cc = None if bc is None else {"local": c1, "global": c2}
+                return x, cc, a1 + a2
+        else:
+            def body(bp, x, bc):
+                return _block_apply(bp, x, cfg, positions=positions,
+                                    window=cfg.window, cache=bc, pos=pos,
+                                    mode=mode, dtype=dtype, moe=False)
+        lc = None if caches in (None, {}) else caches["layers"]
+        x, new_l, aux = _scan_blocks(body, x, params["blocks"], lc, cfg,
+                                     mode)
+        new_caches = None if lc is None else {"layers": new_l}
+    elif fam == "moe":
+        new_caches = {}
+        if cfg.first_dense_layers:
+            def dbody(bp, x, bc):
+                return _block_apply(bp, x, cfg, positions=positions,
+                                    window=cfg.window, cache=bc, pos=pos,
+                                    mode=mode, dtype=dtype, moe=False)
+            dc = None if caches in (None, {}) else caches["dense_layers"]
+            x, new_d, a = _scan_blocks(dbody, x, params["dense_blocks"],
+                                       dc, cfg, mode)
+            aux += a
+            if new_d is not None:
+                new_caches["dense_layers"] = new_d
+
+        def body(bp, x, bc):
+            return _block_apply(bp, x, cfg, positions=positions,
+                                window=cfg.window, cache=bc, pos=pos,
+                                mode=mode, dtype=dtype, moe=True)
+        lc = None if caches in (None, {}) else caches["layers"]
+        x, new_l, a = _scan_blocks(body, x, params["blocks"], lc, cfg,
+                                   mode)
+        aux += a
+        if new_l is not None:
+            new_caches["layers"] = new_l
+        new_caches = new_caches or None
+    elif fam == "hybrid":
+        embed0 = x
+        shared = params["shared_attn"]
+        sub = cfg.replace(d_head=2 * cfg.d_model // cfg.n_heads)
+
+        def mamba_body(bp, x, bc):
+            h = rms_norm(x, bp["ln"], cfg.norm_eps, plus_one=True)
+            o, st = mamba2_apply(bp["mamba"], h, cfg, state=bc, mode=mode,
+                                 dtype=dtype)
+            return x + o, st, 0.0
+
+        def group_body(gp, x, gc):
+            mstack = gp
+            mc = None if gc is None else gc["m"]
+            x, new_m, _ = _scan_blocks(mamba_body, x, mstack, mc, cfg,
+                                       mode)
+            # shared attention block on concat(hidden, embed0)
+            xc = jnp.concatenate([x, embed0], axis=-1)
+            h = rms_norm(xc, shared["ln1"], cfg.norm_eps, plus_one=True)
+            a, new_ac = attn_apply(
+                shared["attn"], h, sub, positions=positions,
+                window=cfg.window,
+                cache=None if gc is None else gc["a"], pos=pos, mode=mode,
+                dtype=dtype)
+            xc2 = xc + a
+            h2 = rms_norm(xc2, shared["ln2"], cfg.norm_eps, plus_one=True)
+            m = mlp_apply(shared["mlp"], h2, cfg.act, dtype=dtype)
+            xc2 = xc2 + m
+            x = x + jnp.einsum("bse,ed->bsd", xc2.astype(dtype),
+                               shared["down"].astype(dtype))
+            cc = None if gc is None else {"m": new_m, "a": new_ac}
+            return x, cc, 0.0
+
+        gc = None if caches in (None, {}) else {"m": caches["mamba"],
+                                                "a": caches["shared"]}
+        x, new_g, _ = _scan_blocks(group_body, x, params["blocks"], gc,
+                                   cfg, mode)
+        new_caches = None if new_g is None else {"mamba": new_g["m"],
+                                                 "shared": new_g["a"]}
+    elif fam == "ssm":
+        def body(bp, x, bc):
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps, plus_one=True)
+            tstate = None if bc is None else {"shift_t": bc["shift_t"],
+                                              "wkv": bc["wkv"]}
+            t, new_t = rwkv6_time_mix(bp["time"], h, cfg, state=tstate,
+                                      mode=mode, dtype=dtype)
+            x = x + t
+            h = rms_norm(x, bp["ln2"], cfg.norm_eps, plus_one=True)
+            cstate = None if bc is None else {"shift_c": bc["shift_c"]}
+            c, new_c = rwkv6_channel_mix(bp["time"], h, cfg, state=cstate,
+                                         mode=mode, dtype=dtype)
+            x = x + c
+            nc = None
+            if new_t is not None:
+                nc = {**new_t, **new_c}
+            return x, nc, 0.0
+        lc = None if caches in (None, {}) else caches["layers"]
+        x, new_l, _ = _scan_blocks(body, x, params["blocks"], lc, cfg,
+                                   mode)
+        new_caches = None if new_l is None else {"layers": new_l}
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(dtype)
+    if output == "hidden":
+        return (x.astype(dtype), head), new_caches, (aux, loss_mask)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(dtype), head)
+    logits = softcap(logits, cfg.final_logit_softcap)
+    # mask vocab padding
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e9, logits)
+    logits = shard(logits, "logits")
+    return logits, new_caches, (aux, loss_mask)

@@ -1,0 +1,1 @@
+from .analysis import RooflineTerms, analyze_record, load_records  # noqa: F401

@@ -1,0 +1,1 @@
+from .fault_tolerance import FaultTolerantLoop, StragglerMonitor  # noqa: F401

@@ -1,0 +1,124 @@
+"""Fault tolerance for the training loop.
+
+Mechanisms (all exercised by tests):
+  * **Checkpoint/restart** — periodic async checkpoints + restore-latest on
+    start; a crash (or preemption signal) loses at most ``ckpt_every``
+    steps. Data pipeline is step-addressable, so resume is deterministic.
+  * **Bad-step rejection** — non-finite loss or gradient norm skips the
+    optimizer update (keeps the previous state) and counts the incident;
+    repeated incidents trigger restore-from-checkpoint.
+  * **Retry with restore** — transient execution errors re-run the step;
+    persistent ones restore the last checkpoint and continue.
+  * **Straggler monitoring** — per-step wall-time EWMA; steps slower than
+    ``threshold ×`` EWMA are flagged through a callback (at fleet scale
+    the callback reschedules the slow host; here it feeds metrics/logs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+import numpy as np
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.ewma: float | None = None
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = False
+        if self.ewma is not None and dt > self.threshold * self.ewma:
+            self.flagged.append((step, dt))
+            is_straggler = True
+            # do not fold outliers into the baseline estimate
+        else:
+            self.ewma = dt if self.ewma is None else (
+                (1 - self.alpha) * self.ewma + self.alpha * dt)
+        return is_straggler
+
+
+@dataclasses.dataclass
+class LoopReport:
+    steps_run: int = 0
+    bad_steps: int = 0
+    retries: int = 0
+    restores: int = 0
+    stragglers: int = 0
+    losses: list = dataclasses.field(default_factory=list)
+
+
+class FaultTolerantLoop:
+    def __init__(self, step_fn: Callable, pipeline, checkpointer=None,
+                 ckpt_every: int = 50, max_retries: int = 2,
+                 max_bad_steps: int = 5,
+                 straggler: StragglerMonitor | None = None,
+                 log: Callable[[str], None] = print):
+        self.step_fn = step_fn
+        self.pipeline = pipeline
+        self.ckpt = checkpointer
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries
+        self.max_bad_steps = max_bad_steps
+        self.monitor = straggler or StragglerMonitor()
+        self.log = log
+
+    def _finite(self, metrics) -> bool:
+        loss = float(metrics.get("loss", math.nan))
+        gn = float(metrics.get("grad_norm", 0.0))
+        return math.isfinite(loss) and math.isfinite(gn)
+
+    def run(self, state, start_step: int, n_steps: int) -> tuple:
+        report = LoopReport()
+        bad_streak = 0
+        step = start_step
+        last_good = state
+        while step < start_step + n_steps:
+            batch = self.pipeline.at(step)
+            t0 = time.perf_counter()
+            try:
+                new_state, metrics = self.step_fn(state, batch)
+            except Exception as e:       # transient executor failure
+                report.retries += 1
+                self.log(f"[ft] step {step}: error {e!r}; retrying")
+                if report.retries > self.max_retries:
+                    if self.ckpt is not None and self.ckpt.latest() is not None:
+                        self.log("[ft] restoring from checkpoint")
+                        state, _ = self.ckpt.restore()
+                        report.restores += 1
+                    report.retries = 0
+                continue
+            dt = time.perf_counter() - t0
+            if self.monitor.observe(step, dt):
+                report.stragglers += 1
+                self.log(f"[ft] step {step}: straggler ({dt:.3f}s vs "
+                         f"ewma {self.monitor.ewma:.3f}s)")
+            if not self._finite(metrics):
+                report.bad_steps += 1
+                bad_streak += 1
+                self.log(f"[ft] step {step}: non-finite loss/grad — "
+                         f"rejected")
+                if bad_streak > self.max_bad_steps:
+                    self.log("[ft] too many bad steps; restoring")
+                    if self.ckpt is not None and self.ckpt.latest() is not None:
+                        restored, rs = self.ckpt.restore()
+                        state = restored
+                        report.restores += 1
+                    bad_streak = 0
+                step += 1            # skip the poisoned batch
+                continue
+            bad_streak = 0
+            state = new_state
+            last_good = state
+            report.losses.append(float(metrics["loss"]))
+            report.steps_run += 1
+            if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(state, step + 1, background=True)
+            step += 1
+        if self.ckpt is not None:
+            self.ckpt.save(last_good, step, background=False)
+        return state, report

@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding rules, per-arch partition
+specs, and the MCMComm-driven layout planner."""

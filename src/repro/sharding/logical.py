@@ -1,0 +1,90 @@
+"""Logical-axis sharding: models annotate activations by *name*; the
+runtime maps names → PartitionSpecs for the current mesh (MaxText/t5x
+style). Outside a mesh context the hints are no-ops, so model code runs
+unchanged on a single CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_RULES: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "logical_rules", default=None)
+_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
+    "logical_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh | None, rules: dict[str, P] | None):
+    t1 = _MESH.set(mesh)
+    t2 = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _MESH.reset(t1)
+        _RULES.reset(t2)
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH.get()
+
+
+def current_rules() -> dict | None:
+    return _RULES.get()
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide the corresponding dim
+    (keeps model code shape-agnostic: batch=1 cells, odd head counts and
+    non-divisible vocab all degrade to replication on that dim)."""
+    out = []
+    for d, entry in enumerate(spec):
+        if entry is None or d >= len(shape):
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        keep = []
+        size = 1
+        for a in axes:
+            n = mesh.shape[a]
+            if shape[d] % (size * n) == 0:
+                keep.append(a)
+                size *= n
+        out.append(tuple(keep) if len(keep) > 1 else
+                   (keep[0] if keep else None))
+    return P(*out)
+
+
+def _coverage(spec: P, mesh: Mesh) -> int:
+    n = 1
+    for e in spec:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            n *= mesh.shape[a]
+    return n
+
+
+def shard(x, name: str):
+    """Annotate activation ``x`` with the sharding registered for logical
+    name ``name``; identity when no rules/mesh are active or the name is
+    not mapped. Specs are sanitized against the concrete shape; a rule may
+    list fallback candidates — the one covering the most devices after
+    sanitization wins."""
+    rules, mesh = _RULES.get(), _MESH.get()
+    if rules is None or mesh is None:
+        return x
+    rule = rules.get(name)
+    if rule is None:
+        return x
+    cands = rule if isinstance(rule, list) else [rule]
+    best, best_cov = None, -1
+    for c in cands:
+        s = sanitize_spec(c, x.shape, mesh)
+        cov = _coverage(s, mesh)
+        if cov > best_cov:
+            best, best_cov = s, cov
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, best))

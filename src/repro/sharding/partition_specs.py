@@ -1,0 +1,223 @@
+"""Per-arch partition specs: parameter shardings by tree-path semantics
+(2-D FSDP("data") × TP("model"), MaxText-style) and logical activation
+rules. The "pod" axis is pure data parallelism — parameters are replicated
+across pods and only gradient all-reduces cross the pod boundary (DCN),
+matching the multi-pod production layout.
+
+Every assignment is sanitized against divisibility, so non-divisible kv
+head counts, expert counts, odd vocabs or batch=1 cells silently degrade
+to replication on that dim instead of failing to lower.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .logical import sanitize_spec
+
+DATA, MODEL, POD = "data", "model", "pod"
+
+# Canonical trailing-dims spec per parameter name. Leading (stack) dims are
+# padded with None at application time.
+_PARAM_RULES: dict[str, P] = {
+    # embeddings / heads
+    "embed": P(MODEL, DATA),
+    "lm_head": P(DATA, MODEL),
+    "patch_proj": P(None, DATA),
+    "frame_proj": P(None, DATA),
+    "mask_emb": P(None),
+    # attention (GQA)
+    "wq": P(DATA, MODEL, None),
+    "wk": P(DATA, MODEL, None),
+    "wv": P(DATA, MODEL, None),
+    "wo": P(MODEL, None, DATA),
+    # MLA (fallbacks relocate the axis when head counts don't divide)
+    "wq_a": P(DATA, MODEL),
+    "wq_b": [P(None, MODEL, None), P(DATA, None, None)],
+    "wkv_a": P(DATA, None),
+    "wk_b": [P(None, MODEL, None), P(DATA, None, None)],
+    "wv_b": [P(None, MODEL, None), P(DATA, None, None)],
+    # MLP
+    "w_gate": P(DATA, MODEL),
+    "w_up": P(DATA, MODEL),
+    "w_down": P(MODEL, DATA),
+    # MoE (fallback: TP the expert FFN dim when n_experts doesn't divide
+    # the model axis — the mixtral 8-expert case)
+    "router": P(DATA, None),
+    "moe_w_gate": [P(MODEL, DATA, None), P(None, DATA, MODEL)],
+    "moe_w_up": [P(MODEL, DATA, None), P(None, DATA, MODEL)],
+    "moe_w_down": [P(MODEL, None, DATA), P(None, MODEL, DATA)],
+    # Mamba2
+    "in_proj": P(DATA, MODEL),
+    "conv_w": P(None, MODEL),
+    "out_proj": P(MODEL, DATA),
+    # RWKV6
+    "wr": P(DATA, MODEL),
+    "ck": P(DATA, MODEL),
+    "cv": P(MODEL, DATA),
+    "cr": P(DATA, MODEL),
+    "wg": P(DATA, MODEL),
+    "mix_A": P(DATA, None),
+    "mix_B": P(None, None, DATA),
+    "decay_A": P(DATA, None),
+    "decay_B": P(None, DATA),
+    "down": P(DATA, None),   # zamba2 shared-block down projection
+}
+# rwkv time-mix projections share attention-style names wk/wv/wo but are
+# rank-2 — the rank-aware padding below handles both.
+
+_MOE_CONTEXT = ("moe",)
+
+
+def _rule_for(path: tuple, leaf) -> P | None:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1]
+    in_moe = any(n == "moe" for n in names)
+    in_rwkv = any(n == "time" for n in names)
+    if in_rwkv and name in ("wq", "wk", "wv", "wo"):
+        # rwkv time-mix projections are plain (D, D) matrices, not the
+        # attention-shaped (D, H, Dh) tensors sharing their names
+        rule = P(DATA, MODEL)
+    else:
+        key = f"moe_{name}" if in_moe and f"moe_{name}" in _PARAM_RULES \
+            else name
+        rule = _PARAM_RULES.get(key)
+    if rule is None:
+        return None                       # norms, scalars → replicate
+    rank = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    candidates = rule if isinstance(rule, list) else [rule]
+    padded = []
+    for r in candidates:
+        trailing = len(r)
+        if rank < trailing:
+            r = P(DATA, MODEL) if rank == 2 else P(*([None] * rank))
+            trailing = len(r)
+        padded.append(P(*([None] * (rank - trailing) + list(r))))
+    return padded
+
+
+def _coverage(spec: P, mesh: Mesh) -> int:
+    n = 1
+    for e in spec:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            n *= mesh.shape[a]
+    return n
+
+
+def _sub_fsdp(spec: P, fsdp) -> P:
+    """Replace the symbolic DATA (FSDP) axis with the chosen axis tuple —
+    (POD, DATA) extends parameter/optimizer sharding across pods (ZeRO
+    over DCN) for models whose state exceeds one pod's HBM; () disables
+    FSDP entirely (replicated-params serving: weights stream from local
+    HBM instead of being re-gathered per decode step)."""
+    out = []
+    for e in spec:
+        if e == DATA:
+            if not fsdp:
+                out.append(None)
+            else:
+                out.append(fsdp if len(fsdp) > 1 else fsdp[0])
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def param_specs(params_shape, mesh: Mesh, fsdp_axes=(DATA,)):
+    """PartitionSpec tree matching a (possibly abstract) param tree.
+    Rules may list fallback candidates; the one that keeps the most mesh
+    axes after divisibility sanitization wins."""
+    fsdp = tuple(a for a in fsdp_axes if a in mesh.shape)
+
+    def one(path, leaf):
+        cands = _rule_for(path, leaf)
+        if cands is None:
+            return P(*([None] * (leaf.ndim if hasattr(leaf, "ndim")
+                                 else len(leaf.shape))))
+        best, best_cov = None, -1
+        for c in cands:
+            s = sanitize_spec(_sub_fsdp(c, fsdp), leaf.shape, mesh)
+            cov = _coverage(s, mesh)
+            if cov > best_cov:
+                best, best_cov = s, cov
+        return best
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(params_shape, mesh: Mesh, fsdp_axes=(DATA,)):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, mesh, fsdp_axes))
+
+
+def batch_axes(mesh: Mesh):
+    return (POD, DATA) if POD in mesh.shape else (DATA,)
+
+
+def activation_rules(mesh: Mesh, *, shard_residual: bool = False) -> dict:
+    """Logical-name → spec map consumed by ``sharding.logical.shard``.
+
+    ``shard_residual``: additionally shard the residual stream's d_model
+    over the model axis (ZeRO-R style activation sharding) — a memory/
+    collective trade-off knob used by §Perf.
+    """
+    dp = batch_axes(mesh)
+    res = MODEL if shard_residual else None
+    return {
+        "act_btd": P(dp, None, res),
+        "act_btf": P(dp, None, MODEL),
+        "act_bshd": P(dp, None, MODEL, None),
+        "act_bti": P(dp, None, MODEL),
+        "logits": P(dp, None, MODEL),
+        "cache": P(dp, MODEL, None, None),      # seq-sharded KV cache
+        "cache_mla": P(dp, MODEL, None),
+        "moe_gtd": P(dp, None, None),           # (groups, group_size, D)
+        # (groups, experts, capacity, feat): EP over experts, falling back
+        # to TP over the expert-FFN dim when n_experts doesn't divide.
+        "moe_ecd": P(dp, MODEL, None, None),
+        "moe_ecf": [P(dp, MODEL, None, None), P(dp, None, None, MODEL)],
+    }
+
+
+def data_specs(mesh: Mesh) -> dict[str, P]:
+    """Input-batch shardings (keyed by input name)."""
+    dp = batch_axes(mesh)
+    return {
+        "tokens": P(dp, None),
+        "labels": P(dp, None),
+        "mask": P(dp, None),
+        "patches": P(dp, None, None),
+        "frames": P(dp, None, None),
+    }
+
+
+def cache_shardings(caches_shape, cfg, mesh: Mesh):
+    """Shardings for serving state: batch over data axes; attention-cache
+    seq (or MLA latent seq) over model; SSM/WKV states over heads."""
+    dp = batch_axes(mesh)
+
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        name = names[-1]
+        rank = len(leaf.shape)
+        if name in ("k", "v"):          # (stack.., B, S, KV, Dh)
+            rule = P(dp, MODEL, None, None)
+        elif name == "ckv" or name == "krope":
+            rule = P(dp, MODEL, None)
+        elif name == "ssm":             # (.., B, H, P, N)
+            rule = P(dp, MODEL, None, None)
+        elif name == "wkv":
+            rule = P(dp, MODEL, None, None)
+        elif name == "conv":            # (.., B, K-1, Cc)
+            rule = P(dp, None, MODEL)
+        elif name in ("shift_t", "shift_c"):
+            rule = P(dp, None)
+        else:
+            rule = P(*([None] * rank))
+        pad = rank - len(rule)
+        rule = P(*([None] * pad + list(rule)))
+        return NamedSharding(mesh, sanitize_spec(rule, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, caches_shape)

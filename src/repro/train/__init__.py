@@ -1,0 +1,4 @@
+"""Training substrate: AdamW (+ZeRO-style sharded states), schedules,
+train step with microbatch accumulation, gradient compression."""
+from .optimizer import adamw, cosine_schedule  # noqa: F401
+from .train_step import TrainState, make_train_step  # noqa: F401

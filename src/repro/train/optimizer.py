@@ -1,0 +1,95 @@
+"""AdamW with decoupled weight decay and global-norm clipping, written
+functionally (no optax dependency). Optimizer moments inherit the exact
+parameter shardings (FSDP×TP), i.e. ZeRO-style sharded optimizer state by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+def adamw(lr: float | Callable = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float | None = 1.0,
+          m_dtype=jnp.float32, v_dtype=jnp.float32) -> Optimizer:
+    """``m_dtype=bf16`` halves first-moment memory — used for the ≥100B
+    models where full-f32 Adam state exceeds per-chip HBM."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, m_dtype), params),
+                "v": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, v_dtype), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        count = state["count"] + 1
+        b1c = 1.0 - b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - b2 ** count.astype(jnp.float32)
+        step_lr = lr_fn(count)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mh = m32 / b1c
+            vh = v32 / b2c
+            delta = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay and p.ndim >= 2:   # no decay on norms/bias
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - step_lr * delta
+                     ).astype(p.dtype),
+                    m32.astype(m_dtype), v32.astype(v_dtype))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        new_state = {"m": new_m, "v": new_v, "count": count}
+        return new_p, new_state, {"grad_norm": gnorm, "lr": step_lr}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,106 @@
+"""Train step factory: loss (per family), grad, microbatch accumulation
+(compute/communication overlap knob), optimizer update.
+
+``TrainState`` is a plain dict pytree: {"params", "opt", "step"} — no
+framework dependency, shardable leaf-by-leaf via
+``sharding.partition_specs``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward, lm_loss, masked_pred_loss
+from ..models.loss import fused_lm_loss
+from .optimizer import Optimizer
+
+TrainState = dict  # {"params": pytree, "opt": {...}, "step": i32}
+
+
+def init_train_state(params, optimizer: Optimizer) -> TrainState:
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def loss_for(cfg, params, batch, aux_weight: float = 0.01):
+    """Training loss via the fused (chunked) CE path — (B,S,vocab) logits
+    are never materialized."""
+    (hidden, head), _, (aux, _) = forward(params, cfg, batch,
+                                          mode="train", output="hidden")
+    if cfg.is_encoder:
+        loss = fused_lm_loss(hidden, head, batch["labels"],
+                             mask=batch["mask"],
+                             final_softcap=cfg.final_logit_softcap,
+                             vocab_size=cfg.vocab_size, shift=False,
+                             chunk=cfg.loss_chunk)
+    elif cfg.frontend == "vision_stub":
+        np_ = cfg.frontend_tokens
+        loss = fused_lm_loss(hidden[:, np_:], head, batch["tokens"],
+                             final_softcap=cfg.final_logit_softcap,
+                             vocab_size=cfg.vocab_size,
+                             chunk=cfg.loss_chunk)
+    else:
+        loss = fused_lm_loss(hidden, head, batch["tokens"],
+                             final_softcap=cfg.final_logit_softcap,
+                             vocab_size=cfg.vocab_size,
+                             chunk=cfg.loss_chunk)
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg, optimizer: Optimizer, accum_steps: int = 1,
+                    accum_dtype=jnp.float32, accum_unroll: bool = False):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``accum_steps > 1`` splits the batch into microbatches scanned
+    sequentially — bounds activation memory and gives XLA independent
+    grad-reduce chunks to overlap with the next microbatch's compute.
+    ``accum_dtype=bf16`` halves the accumulation buffer for the ≥100B
+    models.
+    """
+
+    def grads_of(params, batch):
+        (tot, metrics), grads = jax.value_and_grad(
+            lambda p: loss_for(cfg, p, batch), has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: dict):
+        params = state["params"]
+        if accum_steps == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                mb = b // accum_steps
+                return x[: mb * accum_steps].reshape(
+                    (accum_steps, mb) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(accum_dtype), g_acc, g)
+                m_acc = jax.tree.map(lambda a, b_: a + b_, m_acc, m)
+                return (g_acc, m_acc), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            zero_m = {"loss": jnp.zeros((), jnp.float32),
+                      "aux": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(
+                acc_step, (zero_g, zero_m), micro,
+                unroll=accum_steps if accum_unroll else 1)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: m / accum_steps, metrics)
+
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, state["opt"], params)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {**metrics, **opt_metrics}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,66 @@
+"""Top-level core API tests: optimize() across methods/objectives, the
+polish pass, and ScheduleResult plumbing."""
+import numpy as np
+import pytest
+
+from repro.core import GemmOp, Task, make_hw, optimize
+from repro.core.ga import GAConfig
+from repro.core.miqp import MIQPConfig
+
+
+def task():
+    ops = [GemmOp("a", M=512, K=256, N=1024),
+           GemmOp("b", M=512, K=1024, N=512, chained=True),
+           GemmOp("c", M=512, K=512, N=1024, chained=True)]
+    return Task("t3", ops)
+
+
+def test_all_methods_run():
+    hw = make_hw("A", 4)
+    t = task()
+    res = {}
+    for m in ("baseline", "simba", "ga", "miqp"):
+        r = optimize(t, hw, m, "latency",
+                     ga_config=GAConfig(generations=15, population=24),
+                     miqp_config=MIQPConfig(time_limit=10))
+        r.partition.validate(t)
+        res[m] = r.latency
+    assert res["ga"] <= res["baseline"] + 1e-12
+    assert res["miqp"] <= res["baseline"] + 1e-12
+
+
+def test_speedup_property_and_pipeline():
+    hw = make_hw("B", 4)
+    r = optimize(task(), hw, "miqp",
+                 miqp_config=MIQPConfig(time_limit=10))
+    assert r.speedup_vs_baseline >= 1.0 - 1e-9
+    p = r.pipeline(batch=4)
+    assert p.speedup >= 1.0
+
+
+def test_unknown_method_raises():
+    with pytest.raises(ValueError):
+        optimize(task(), make_hw("A", 4), "magic")
+
+
+def test_edp_method_improves_or_matches():
+    hw = make_hw("A", 4)
+    r = optimize(task(), hw, "ga", "edp",
+                 ga_config=GAConfig(generations=20, population=24))
+    assert r.edp <= r.baseline.edp * 1.0 + 1e-18
+
+
+def test_polish_only_improves():
+    from repro.core.api import _polish
+    from repro.core.evaluator import EvalOptions, Evaluator
+    from repro.core.workload import uniform_partition
+    hw = make_hw("A", 4, diagonal_links=True)
+    t = task()
+    opts = EvalOptions(redistribution=True, async_exec=True)
+    ev = Evaluator(t, hw, opts)
+    part = uniform_partition(t, 4, 4)
+    rd = ev.chain_valid.copy()
+    before = ev.evaluate(part, rd).latency
+    p2, rd2 = _polish(t, hw, opts, part, rd, "latency")
+    after = ev.evaluate(p2, rd2).latency
+    assert after <= before + 1e-15

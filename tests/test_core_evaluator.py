@@ -1,0 +1,147 @@
+"""End-to-end evaluator invariants (paper Sec. 4.2.4–4.4, 5.1–5.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EvalOptions, Evaluator, GemmOp, Task, make_hw,
+                        uniform_partition)
+from repro.core.workload import Partition, clamp_partition_to_domain
+
+
+def toy_task(n=3, chained=True):
+    ops = [GemmOp("g0", M=512, K=256, N=512)]
+    for i in range(1, n):
+        ops.append(GemmOp(f"g{i}", M=512, K=ops[-1].N, N=512,
+                          chained=chained))
+    return Task("toy", ops)
+
+
+def test_partition_validation():
+    task = toy_task()
+    part = uniform_partition(task, 4, 4)
+    part.validate(task)
+    bad = part.copy()
+    bad.Px[0, 0] += 1
+    with pytest.raises(ValueError):
+        bad.validate(task)
+
+
+def test_latency_positive_all_types():
+    task = toy_task()
+    for t in "ABCD":
+        for mem in ("hbm", "dram"):
+            hw = make_hw(t, 4, mem)
+            r = Evaluator(task, hw, EvalOptions()).evaluate(
+                uniform_partition(task, 4, 4))
+            assert r.latency > 0 and r.energy > 0 and r.edp > 0
+
+
+def test_redistribution_helps_chained():
+    task = toy_task(chained=True)
+    hw = make_hw("A", 4, "hbm")
+    base = Evaluator(task, hw, EvalOptions()).evaluate(
+        uniform_partition(task, 4, 4))
+    red = Evaluator(task, hw, EvalOptions(redistribution=True)).evaluate(
+        uniform_partition(task, 4, 4))
+    assert red.latency <= base.latency
+
+
+def test_redistribution_noop_unchained():
+    task = toy_task(chained=False)
+    hw = make_hw("A", 4, "hbm")
+    a = Evaluator(task, hw, EvalOptions()).evaluate(
+        uniform_partition(task, 4, 4))
+    b = Evaluator(task, hw, EvalOptions(redistribution=True)).evaluate(
+        uniform_partition(task, 4, 4))
+    assert a.latency == pytest.approx(b.latency)
+
+
+def test_async_never_hurts():
+    task = toy_task()
+    hw = make_hw("A", 4, "hbm")
+    part = uniform_partition(task, 4, 4)
+    sync = Evaluator(task, hw, EvalOptions()).evaluate(part)
+    fused = Evaluator(task, hw, EvalOptions(async_exec=True)).evaluate(part)
+    assert fused.latency <= sync.latency + 1e-12
+
+
+def test_diagonal_links_never_hurt():
+    task = toy_task()
+    part = uniform_partition(task, 4, 4)
+    plain = Evaluator(task, make_hw("A", 4), EvalOptions()).evaluate(part)
+    diag = Evaluator(task, make_hw("A", 4, diagonal_links=True),
+                     EvalOptions()).evaluate(part)
+    assert diag.latency <= plain.latency + 1e-12
+
+
+def test_memory_bw_monotonicity():
+    """More off-chip bandwidth can only help."""
+    task = toy_task()
+    part = uniform_partition(task, 4, 4)
+    lat = []
+    for bw in (30e9, 60e9, 240e9, 1000e9):
+        hw = make_hw("A", 4).replace(bw_mem=bw)
+        lat.append(Evaluator(task, hw, EvalOptions()).evaluate(part).latency)
+    assert all(a >= b - 1e-15 for a, b in zip(lat, lat[1:]))
+
+
+def test_batch_eval_matches_single():
+    task = toy_task()
+    hw = make_hw("B", 4, "hbm")
+    ev = Evaluator(task, hw, EvalOptions(redistribution=True))
+    rng = np.random.default_rng(0)
+    parts = []
+    for _ in range(5):
+        p = uniform_partition(task, 4, 4)
+        p.collectors = rng.integers(0, 4, len(task))
+        parts.append(p)
+    Px = np.stack([p.Px for p in parts]).astype(float)
+    Py = np.stack([p.Py for p in parts]).astype(float)
+    co = np.stack([p.collectors for p in parts])
+    rd = np.ones((5, len(task)))
+    batch = ev.evaluate_batch(Px, Py, co, rd)
+    for i, p in enumerate(parts):
+        single = ev.evaluate(p, redist_mask=np.ones(len(task), bool))
+        assert batch["latency"][i] == pytest.approx(single.latency)
+        assert batch["energy"][i] == pytest.approx(single.energy)
+
+
+def test_energy_modes():
+    task = toy_task()
+    hw = make_hw("A", 4)
+    part = uniform_partition(task, 4, 4)
+    paper = Evaluator(task, hw, EvalOptions(energy_mode="paper")
+                      ).evaluate(part)
+    per = Evaluator(task, hw, EvalOptions(energy_mode="per_chiplet")
+                    ).evaluate(part)
+    # paper mode charges max-cycles on every chiplet -> upper bound
+    assert paper.energy >= per.energy - 1e-15
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(64, 4096), k=st.integers(16, 2048),
+       n=st.integers(64, 4096), t=st.sampled_from(["A", "B", "C", "D"]))
+def test_single_gemm_properties(m, k, n, t):
+    task = Task("one", [GemmOp("g", M=m, K=k, N=n)])
+    hw = make_hw(t, 4)
+    r = Evaluator(task, hw, EvalOptions()).evaluate(
+        uniform_partition(task, 4, 4))
+    assert np.isfinite(r.latency) and r.latency > 0
+    assert np.isfinite(r.energy) and r.energy > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_clamp_to_domain_feasible(seed):
+    rng = np.random.default_rng(seed)
+    task = toy_task(4)
+    part = uniform_partition(task, 4, 4)
+    part.Px = part.Px + rng.integers(-64, 64, part.Px.shape)
+    part.Px = np.maximum(part.Px, 0)
+    for i, op in enumerate(task.ops):
+        d = op.M - part.Px[i].sum()
+        part.Px[i, 0] += d
+        part.Px[i] = np.maximum(part.Px[i], 0)
+        part.Px[i, np.argmax(part.Px[i])] += op.M - part.Px[i].sum()
+    fixed = clamp_partition_to_domain(part, task, 4, 4, 16, 16)
+    fixed.validate(task)

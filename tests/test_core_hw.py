@@ -1,0 +1,85 @@
+"""Topology / hop-formula invariants (paper Sec. 4.1/4.3, 5.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hw import HWConfig, MCMType, make_hw
+
+
+@pytest.mark.parametrize("t", ["A", "B", "C", "D"])
+@pytest.mark.parametrize("grid", [2, 4, 5, 8])
+def test_topology_basics(t, grid):
+    hw = make_hw(t, grid)
+    top = hw.topology
+    assert top.entrance_id.shape == (grid, grid)
+    assert (top.x_local >= 0).all() and (top.y_local >= 0).all()
+    # every chiplet maps to a real entrance
+    assert top.entrance_id.max() < top.n_entrances
+    # entrance chiplets are their own entrance (distance 0)
+    for e, (ex, ey, kind) in enumerate(top.entrances):
+        assert top.entrance_id[ex, ey] == e or (
+            top.x_local[ex, ey] + top.y_local[ex, ey] == 0)
+
+
+def test_type_a_indexing_matches_paper():
+    """Type A: local index = global index (corner global chiplet)."""
+    top = make_hw("A", 4).topology
+    gx, gy = np.meshgrid(np.arange(4), np.arange(4), indexing="ij")
+    assert (top.x_local == gx).all()
+    assert (top.y_local == gy).all()
+    assert top.n_entrances == 1
+
+
+def test_hop_formulas_eq10_11_12():
+    top = make_hw("A", 5).topology
+    x, y = top.x_local, top.y_local
+    assert (top.hops_low == x + y).all()
+    assert (top.hops_row_shared == 5 + y).all()      # eq. 11: X + y
+    assert (top.hops_col_shared == 5 + x).all()      # eq. 12: Y + x
+
+
+def test_diagonal_links_hop_formula():
+    """Sec. 5.1.1: with diagonals, hops = min(X+y, X−x+max(x,y))."""
+    plain = make_hw("A", 5).topology
+    diag = make_hw("A", 5, diagonal_links=True).topology
+    x, y = plain.x_local, plain.y_local
+    expect = np.minimum(5 + y, 5 - x + np.maximum(x, y))
+    assert (diag.hops_row_shared == expect).all()
+    assert (diag.hops_row_shared <= plain.hops_row_shared).all()
+
+
+def test_diagonal_entrance_bandwidth_50pct():
+    """The paper's '50% more bandwidth on the bottleneck': corner entrance
+    links go from 2 to 3."""
+    assert make_hw("A", 4).topology.entrance_links[0] == 2
+    assert make_hw("A", 4, diagonal_links=True).topology.entrance_links[0] \
+        == 3
+
+
+def test_type_c_zero_hops():
+    top = make_hw("C", 4).topology
+    assert (top.hops_low == 0).all()
+    assert top.n_entrances == 16
+
+
+def test_type_d_near_uniform():
+    """Paper Sec. 7.1: type-D memory distance is almost uniform at 4x4."""
+    top = make_hw("D", 4).topology
+    dist = top.x_local + top.y_local
+    assert dist.max() <= 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(grid=st.integers(2, 8), t=st.sampled_from(["A", "B", "C", "D"]))
+def test_hops_nonnegative_and_bounded(grid, t):
+    top = make_hw(t, grid).topology
+    for h in (top.hops_low, top.hops_row_shared, top.hops_col_shared):
+        assert (h >= 0).all()
+        assert h.max() <= 3 * grid
+
+
+def test_bad_config_rejected():
+    with pytest.raises(ValueError):
+        HWConfig(X=0)
+    with pytest.raises(ValueError):
+        HWConfig(R=0)

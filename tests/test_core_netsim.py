@@ -1,0 +1,53 @@
+"""Flow simulator vs the paper's Fig. 3 motivation claims."""
+import pytest
+
+from repro.core.netsim import MeshNet, fig3_case, simulate_pull
+
+GB = 1e9
+
+
+def test_dram_memory_bound_nop_scaling_useless():
+    """Fig 3(a)/(d): DRAM-bound — 2x NoP bandwidth gives no speedup."""
+    a = fig3_case("dram", "peripheral", bw_nop=60 * GB)
+    b = fig3_case("dram", "peripheral", bw_nop=120 * GB)
+    assert a["latency"] == pytest.approx(b["latency"], rel=1e-6)
+    assert a["latency"] == pytest.approx(16 / 60, rel=1e-6)  # 16 GB / BW
+
+
+def test_hbm_nop_bound_scales_linearly():
+    """Fig 3(b)/(d): HBM case scales linearly with NoP bandwidth."""
+    a = fig3_case("hbm", "peripheral", bw_nop=60 * GB)
+    b = fig3_case("hbm", "peripheral", bw_nop=120 * GB)
+    assert a["latency"] / b["latency"] == pytest.approx(2.0, rel=1e-3)
+
+
+def test_hbm_central_placement_gain():
+    """Fig 3(c)/(d): central memory placement ≈1.5x over peripheral
+    (paper: 1.53x)."""
+    p = fig3_case("hbm", "peripheral")
+    c = fig3_case("hbm", "central")
+    assert p["latency"] / c["latency"] == pytest.approx(1.5, abs=0.1)
+
+
+def test_dram_placement_no_impact():
+    p = fig3_case("dram", "peripheral")
+    c = fig3_case("dram", "central")
+    assert p["latency"] == pytest.approx(c["latency"], rel=1e-6)
+
+
+def test_link_utilization_hotspot_near_entrance():
+    out = fig3_case("hbm", "peripheral")
+    util = out["link_util"]
+    # hottest mesh link is adjacent to the attach chiplet (node 0)
+    mesh_links = {l: u for l, u in util.items() if 16 not in l}
+    hot = max(mesh_links, key=mesh_links.get)
+    assert 0 in hot
+
+
+def test_flow_conservation():
+    net = MeshNet(4, 4, 60 * GB, 1024 * GB, [0])
+    out = simulate_pull(net, 1 * GB)
+    # every destination got its full message through its last link
+    for f in out["flows"]:
+        assert f.bytes_left <= 1e-3
+        assert f.done_at is not None and f.done_at <= out["latency"] + 1e-9

@@ -1,0 +1,66 @@
+"""RCPSP pipelining tests (paper Sec. 5.4 / Fig. 11)."""
+import pytest
+
+from repro.core.pipelining import (build_jobs, list_schedule, milp_schedule,
+                                   pipeline_batch, sequential_makespan)
+
+SEGS = [("op0", 2.0, 3.0, 1.0), ("op1", 1.0, 4.0, 1.0),
+        ("op2", 2.0, 2.0, 2.0)]
+
+
+def _check_schedule_valid(jobs, starts, makespan):
+    byid = {j.jid: j for j in jobs}
+    # precedence
+    for j in jobs:
+        for p in j.preds:
+            assert starts[j.jid] >= starts[p] + byid[p].dur - 1e-9
+    # unit resources never overlap
+    for res in ("comm", "comp"):
+        ivals = sorted((starts[j.jid], starts[j.jid] + j.dur)
+                       for j in jobs if j.resource == res and j.dur > 0)
+        for (s1, e1), (s2, e2) in zip(ivals, ivals[1:]):
+            assert s2 >= e1 - 1e-9
+    assert makespan >= max(starts[j.jid] + j.dur for j in jobs) - 1e-9
+
+
+def test_list_schedule_valid_and_bounded():
+    jobs = build_jobs(SEGS, batch=4)
+    ms, starts = list_schedule(jobs)
+    _check_schedule_valid(jobs, starts, ms)
+    seq = sequential_makespan(SEGS, 4)
+    # lower bound: busiest resource; upper bound: sequential
+    comm = sum(j.dur for j in jobs if j.resource == "comm")
+    comp = sum(j.dur for j in jobs if j.resource == "comp")
+    assert max(comm, comp) - 1e-9 <= ms <= seq + 1e-9
+
+
+def test_single_sample_no_overlap_possible():
+    jobs = build_jobs(SEGS, batch=1)
+    ms, _ = list_schedule(jobs)
+    assert ms == pytest.approx(sequential_makespan(SEGS, 1))
+
+
+def test_pipeline_speedup_grows_then_saturates():
+    s2 = pipeline_batch(SEGS, 2).speedup
+    s8 = pipeline_batch(SEGS, 8).speedup
+    s16 = pipeline_batch(SEGS, 16).speedup
+    assert 1.0 <= s2 <= s8 <= s16 + 1e-9
+    # bounded by total/bottleneck ratio
+    total = sum(a + b + c for _, a, b, c in SEGS)
+    bottleneck = max(sum(a + c for _, a, _, c in SEGS),
+                     sum(b for _, _, b, _ in SEGS))
+    assert s16 <= total / bottleneck + 1e-9
+
+
+def test_milp_no_worse_than_greedy():
+    jobs = build_jobs(SEGS, batch=3)
+    greedy, _ = list_schedule(jobs)
+    ms, starts = milp_schedule(jobs, n_buckets=40, time_limit=20)
+    assert ms <= greedy + 1e-9
+
+
+def test_zero_duration_segments():
+    segs = [("a", 0.0, 2.0, 0.0), ("b", 1.0, 1.0, 0.0)]
+    r = pipeline_batch(segs, 4)
+    assert r.pipelined > 0
+    assert r.speedup >= 1.0

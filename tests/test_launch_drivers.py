@@ -1,0 +1,43 @@
+"""End-to-end driver tests: train.py (with restart) and serve.py mains
+on reduced configs + debug mesh."""
+import jax
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+
+
+def test_train_driver_end_to_end(tmp_path):
+    report = train_mod.main([
+        "--arch", "smollm-360m", "--reduced", "--steps", "12",
+        "--batch", "4", "--seq", "48", "--lr", "3e-3",
+        "--ckpt", str(tmp_path), "--ckpt-every", "5",
+        "--log-every", "6",
+    ])
+    assert report.steps_run == 12
+    assert report.losses[-1] < report.losses[0]
+
+
+def test_train_driver_restart_resumes(tmp_path):
+    train_mod.main([
+        "--arch", "smollm-360m", "--reduced", "--steps", "6",
+        "--batch", "4", "--seq", "48", "--ckpt", str(tmp_path),
+        "--ckpt-every", "3", "--log-every", "100",
+    ])
+    # crash-restart: a fresh process would pass --restore auto
+    report = train_mod.main([
+        "--arch", "smollm-360m", "--reduced", "--steps", "4",
+        "--batch", "4", "--seq", "48", "--ckpt", str(tmp_path),
+        "--restore", "auto", "--log-every", "100",
+    ])
+    assert report.steps_run == 4
+
+
+def test_serve_driver():
+    outs = serve_mod.main([
+        "--arch", "smollm-360m", "--reduced", "--requests", "5",
+        "--batch", "2", "--new-tokens", "6", "--capacity", "64",
+    ])
+    assert len(outs) == 5
+    assert all(len(o) == 6 for o in outs)

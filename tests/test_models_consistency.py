@@ -1,0 +1,78 @@
+"""Serving-path correctness: prefill + decode must reproduce the full
+forward pass (validates KV caches incl. MLA latent cache, ring buffers,
+SSM/WKV states, token-shift states)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import forward, init_caches, init_model
+
+KEY = jax.random.PRNGKey(1)
+B, S, CAP = 2, 33, 48
+
+DECODERS = [a for a in ARCHS if not get_config(a).is_encoder]
+
+
+@pytest.mark.parametrize("arch", DECODERS)
+def test_prefill_then_decode_matches_full(arch):
+    cfg = get_config(arch, reduced=True).replace(dtype="float32")
+    params = init_model(cfg, KEY)
+    st = S - (cfg.frontend_tokens if cfg.frontend == "vision_stub" else 0)
+    toks = jax.random.randint(KEY, (B, st + 1), 0, cfg.vocab_size)
+    full = {"tokens": toks}
+    pre = {"tokens": toks[:, :-1]}
+    if cfg.frontend == "vision_stub":
+        patches = jax.random.normal(KEY, (B, cfg.frontend_tokens,
+                                          cfg.frontend_dim))
+        full["patches"] = patches
+        pre["patches"] = patches
+    lg_full, _, _ = forward(params, cfg, full)
+    caches = init_caches(cfg, B, CAP, dtype=jnp.float32)
+    _, caches, _ = forward(params, cfg, pre, mode="prefill", caches=caches)
+    lg_dec, _, _ = forward(params, cfg, {"tokens": toks[:, -1:]},
+                           mode="decode", caches=caches, pos=jnp.asarray(S))
+    V = cfg.vocab_size
+    err = float(jnp.abs(lg_full[:, -1, :V] - lg_dec[:, 0, :V]).max())
+    scale = max(float(jnp.abs(lg_full[:, -1, :V]).max()), 1.0)
+    assert err < 2e-3 * scale, f"{arch}: err={err:.3e} scale={scale:.1f}"
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "mixtral-8x22b"])
+def test_ring_buffer_window_decode(arch):
+    """Sliding-window cache: decode far beyond the window capacity must
+    match a full forward that only sees the window anyway."""
+    cfg = get_config(arch, reduced=True).replace(dtype="float32")
+    params = init_model(cfg, KEY)
+    n = cfg.window + 9        # go past capacity to exercise the ring
+    toks = jax.random.randint(KEY, (B, n + 1), 0, cfg.vocab_size)
+    lg_full, _, _ = forward(params, cfg, {"tokens": toks})
+    caches = init_caches(cfg, B, 2 * cfg.window)
+    _, caches, _ = forward(params, cfg, {"tokens": toks[:, :-1]},
+                           mode="prefill", caches=caches)
+    lg_dec, _, _ = forward(params, cfg, {"tokens": toks[:, -1:]},
+                           mode="decode", caches=caches,
+                           pos=jnp.asarray(n))
+    V = cfg.vocab_size
+    err = float(jnp.abs(lg_full[:, -1, :V] - lg_dec[:, 0, :V]).max())
+    scale = max(float(jnp.abs(lg_full[:, -1, :V]).max()), 1.0)
+    assert err < 5e-3 * scale, f"{arch}: err={err:.3e}"
+
+
+def test_multi_step_decode_matches_full():
+    """Three consecutive decode steps track the full forward."""
+    cfg = get_config("smollm-360m", reduced=True).replace(dtype="float32")
+    params = init_model(cfg, KEY)
+    n = 20
+    toks = jax.random.randint(KEY, (B, n + 3), 0, cfg.vocab_size)
+    lg_full, _, _ = forward(params, cfg, {"tokens": toks})
+    caches = init_caches(cfg, B, 64, dtype=jnp.float32)
+    _, caches, _ = forward(params, cfg, {"tokens": toks[:, :n]},
+                           mode="prefill", caches=caches)
+    for i in range(3):
+        lg, caches, _ = forward(params, cfg,
+                                {"tokens": toks[:, n + i: n + i + 1]},
+                                mode="decode", caches=caches,
+                                pos=jnp.asarray(n + i))
+        err = float(jnp.abs(lg_full[:, n + i] - lg[:, 0]).max())
+        assert err < 1e-3 * max(float(jnp.abs(lg_full[:, n + i]).max()), 1.0)
