@@ -1,0 +1,27 @@
+# Convenience targets; everything runs with PYTHONPATH=src (no install).
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test smoke bench-fast ga-fitness quickstart
+
+# Tier-1 verify — the command CI and the roadmap pin.
+test:
+	$(PY) -m pytest -x -q
+
+# Fast gate: environment sanity (imports, optional-hypothesis shim) +
+# the core evaluator / backend-parity / sweep suites. Catches the class
+# of failure where a missing dev dependency breaks test collection.
+smoke:
+	$(PY) -m pytest -x -q tests/test_core_evaluator.py \
+	    tests/test_backend_parity.py tests/test_core_sweep.py \
+	    tests/test_core_api.py
+
+bench-fast:
+	$(PY) -m benchmarks.run
+
+# Backend shootout for the GA fitness hot loop (DESIGN.md §8).
+ga-fitness:
+	$(PY) -m benchmarks.perf_iterations --cell ga_fitness
+
+quickstart:
+	$(PY) examples/quickstart.py

@@ -2,32 +2,43 @@
 
 Paper claims: the RCPSP (ILP) pipeliner finds ample overlap and the
 per-sample speedup stays roughly constant across batch sizes.
+
+Grid driving (benchmarks/README.md): one MIQP schedule per workload,
+then the (workload × batch) pipelining grid runs via ``sweep.run_grid``.
 """
 from __future__ import annotations
 
-from repro.core import make_hw, optimize
+from repro.core import make_hw, optimize, sweep
 from repro.core.miqp import MIQPConfig
 from repro.graphs import WORKLOADS
 
 from .common import emit, save_json, timed
 
 
-def main(fast: bool = False):
+def main(fast: bool = False, backend: str = "jax"):
     hw = make_hw("A", 4, "hbm")
     results = {}
     wnames = ("alexnet",) if fast else ("alexnet", "vit", "hydranet")
+    scheds = {w: optimize(WORKLOADS[w](batch=1), hw, "miqp",
+                          backend=backend,
+                          miqp_config=MIQPConfig(time_limit=30))
+              for w in wnames}
+
+    def report(pt, r, us):
+        wname, batch = pt["wname"], pt["batch"]
+        results[f"{wname}/b{batch}"] = r.speedup
+        emit(f"fig11/{wname}/batch{batch}", us,
+             f"speedup={r.speedup:.3f}x per_sample_us="
+             f"{r.per_sample*1e6:.1f}")
+
+    sweep.run_grid(
+        sweep.grid(wname=wnames, batch=(2, 4, 8, 16)),
+        lambda wname, batch: scheds[wname].pipeline(batch),
+        emit=report)
+
+    # ILP refinement on the smallest instance (paper: solver-based)
     for wname in wnames:
-        task = WORKLOADS[wname](batch=1)
-        sched = optimize(task, hw, "miqp",
-                         miqp_config=MIQPConfig(time_limit=30))
-        for batch in (2, 4, 8, 16):
-            r, us = timed(sched.pipeline, batch)
-            results[f"{wname}/b{batch}"] = r.speedup
-            emit(f"fig11/{wname}/batch{batch}", us,
-                 f"speedup={r.speedup:.3f}x per_sample_us="
-                 f"{r.per_sample*1e6:.1f}")
-        # ILP refinement on the smallest instance (paper: solver-based)
-        r, us = timed(sched.pipeline, 4, True)
+        r, us = timed(scheds[wname].pipeline, 4, True)
         emit(f"fig11/{wname}/batch4_ilp", us, f"speedup={r.speedup:.3f}x")
     save_json("fig11", results)
 

@@ -4,42 +4,58 @@ Paper claims: GA/MIQP latency speedups of 40%/72% over LS (EDP 28%/37%),
 with the GA–MIQP gap *wider* than the HBM case (off-chip congestion
 simplifies the on-chip scheduling space, so MIQP solves closer to
 optimal within its budget).
+
+Grid driving (benchmarks/README.md): per-workload LS references come
+from one batched sweep (latency + EDP from the same records); the
+(objective × workload × method) solver grid runs via ``sweep.run_grid``.
 """
 from __future__ import annotations
 
-from repro.core import make_hw, optimize
+from repro.core import make_hw, optimize, sweep
 from repro.core.ga import GAConfig
 from repro.core.miqp import MIQPConfig
 from repro.graphs import WORKLOADS
 
-from .common import emit, geomean, save_json, timed
+from .common import emit, geomean, save_json
 
 GA_CFG = GAConfig(generations=60, population=64)
 MIQP_CFG = MIQPConfig(time_limit=60, edp_sweep=3)
+METHOD_KW = {"ga": {"ga_config": GA_CFG}, "miqp": {"miqp_config": MIQP_CFG}}
 
 
-def main(fast: bool = False):
+def main(fast: bool = False, backend: str = "jax"):
     hw = make_hw("A", 4, "dram")
-    results = {}
     wnames = ("alexnet", "hydranet") if fast else tuple(WORKLOADS)
-    for objective in ("latency", "edp"):
-        sp = {"ga": [], "miqp": []}
-        for wname in wnames:
-            task = WORKLOADS[wname](batch=1)
-            base = optimize(task, hw, "baseline")
-            ref = (base.baseline.latency if objective == "latency"
-                   else base.baseline.edp)
-            for method, kw in (("ga", {"ga_config": GA_CFG}),
-                               ("miqp", {"miqp_config": MIQP_CFG})):
-                r, us = timed(optimize, task, hw, method, objective, **kw)
-                val = r.latency if objective == "latency" else r.edp
-                sp[method].append(ref / val)
-                results[f"{objective}/{wname}/{method}"] = ref / val
-                emit(f"fig12/{objective}/{wname}/{method}", us,
-                     f"speedup={ref/val:.3f}x")
-        for m in sp:
-            emit(f"fig12/{objective}/geomean/{m}", 0.0,
-                 f"{(geomean(sp[m]) - 1) * 100:+.1f}% vs LS")
+    tasks = {w: WORKLOADS[w](batch=1) for w in wnames}
+
+    base_recs = sweep.eval_sweep(
+        [sweep.EvalPoint(tasks[w], hw) for w in wnames], backend=backend)
+    ref = dict(zip(wnames, base_recs))
+
+    results = {}
+    sp = {(o, m): [] for o in ("latency", "edp") for m in METHOD_KW}
+
+    def solve(objective, wname, method):
+        return optimize(tasks[wname], hw, method, objective,
+                        backend=backend, **METHOD_KW[method])
+
+    def report(pt, r, us):
+        o, wname, m = pt["objective"], pt["wname"], pt["method"]
+        val = r.latency if o == "latency" else r.edp
+        s = ref[wname][o] / val
+        sp[(o, m)].append(s)
+        results[f"{o}/{wname}/{m}"] = s
+        emit(f"fig12/{o}/{wname}/{m}", us, f"speedup={s:.3f}x")
+
+    sweep.run_grid(
+        sweep.grid(objective=("latency", "edp"), wname=wnames,
+                   method=list(METHOD_KW)),
+        solve, emit=report)
+
+    for o in ("latency", "edp"):
+        for m in METHOD_KW:
+            emit(f"fig12/{o}/geomean/{m}", 0.0,
+                 f"{(geomean(sp[(o, m)]) - 1) * 100:+.1f}% vs LS")
     save_json("fig12", results)
 
 

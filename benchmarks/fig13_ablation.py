@@ -4,48 +4,65 @@ Paper claims: partition-only optimization gives a relatively small
 speedup; adding diagonal links unlocks most of the gain (bypassing
 collection congestion + flattening memory-latency non-uniformity);
 pipelining adds further latency gains on top.
+
+Grid driving (benchmarks/README.md): LS references come from the batched
+sweep; the (workload × ablation-variant) GA grid runs via
+``sweep.run_grid``; pipelining is layered on the diagonal-link result.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import EvalOptions, Evaluator, make_hw, optimize
+from repro.core import EvalOptions, Evaluator, make_hw, sweep
 from repro.core.ga import GAConfig, run_ga
+from repro.core.pipelining import pipeline_batch
 from repro.graphs import WORKLOADS
 
-from .common import emit, save_json, timed
+from .common import emit, save_json
 
 GA_CFG = GAConfig(generations=60, population=64)
 
 
-def main(fast: bool = False):
+def main(fast: bool = False, backend: str = "jax"):
     results = {}
     wnames = ("alexnet", "hydranet") if fast else ("alexnet", "vit",
                                                    "hydranet")
+    tasks = {w: WORKLOADS[w](batch=1) for w in wnames}
+    hw_plain = make_hw("A", 4, "hbm")
+    hw_diag = make_hw("A", 4, "hbm", diagonal_links=True)
+    opts = EvalOptions(redistribution=True, async_exec=True)
+
+    base_recs = sweep.eval_sweep(
+        [sweep.EvalPoint(tasks[w], hw_plain) for w in wnames],
+        backend=backend)
+    base = {w: r["latency"] for w, r in zip(wnames, base_recs)}
+
+    # variant axis: partitioning only (plain mesh) vs + diagonal links
+    ga_out = {}
+
+    def solve(wname, variant):
+        hw = hw_plain if variant == "partition_only" else hw_diag
+        return run_ga(tasks[wname], hw, "latency", opts, GA_CFG,
+                      backend=backend)
+
+    def report(pt, r, us):
+        w, v = pt["wname"], pt["variant"]
+        ga_out[(w, v)] = r
+        emit(f"fig13/{w}/{v}", us, f"{base[w] / r.objective:.3f}x")
+
+    sweep.run_grid(
+        sweep.grid(wname=wnames, variant=("partition_only",
+                                          "plus_diagonal")),
+        solve, emit=report)
+
     for wname in wnames:
-        task = WORKLOADS[wname](batch=1)
-        hw_plain = make_hw("A", 4, "hbm")
-        hw_diag = make_hw("A", 4, "hbm", diagonal_links=True)
-        base = optimize(task, hw_plain, "baseline").baseline.latency
-        opts = EvalOptions(redistribution=True, async_exec=True)
-
-        # 1) partitioning only (no diagonal links)
-        ga1, us1 = timed(run_ga, task, hw_plain, "latency", opts, GA_CFG)
-        # 2) + diagonal links
-        ga2, us2 = timed(run_ga, task, hw_diag, "latency", opts, GA_CFG)
-        # 3) + pipelining (batch 4)
-        ev = Evaluator(task, hw_diag, opts)
+        ga2 = ga_out[(wname, "plus_diagonal")]
+        ev = Evaluator(tasks[wname], hw_diag, opts, backend=backend)
         res = ev.evaluate(ga2.partition, ga2.redist_mask)
-        from repro.core.pipelining import pipeline_batch
         pipe = pipeline_batch(res.segments(), 4)
-        part_sp = base / ga1.objective
-        diag_sp = base / ga2.objective
-        pipe_sp = base / (pipe.pipelined / 4)
-
+        part_sp = base[wname] / ga_out[(wname, "partition_only")].objective
+        diag_sp = base[wname] / ga2.objective
+        pipe_sp = base[wname] / (pipe.pipelined / 4)
         results[wname] = {"partition": part_sp, "diag": diag_sp,
                           "pipe": pipe_sp}
-        emit(f"fig13/{wname}/partition_only", us1, f"{part_sp:.3f}x")
-        emit(f"fig13/{wname}/plus_diagonal", us2, f"{diag_sp:.3f}x")
         emit(f"fig13/{wname}/plus_pipelining", 0.0, f"{pipe_sp:.3f}x")
     save_json("fig13", results)
 

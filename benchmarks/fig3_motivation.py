@@ -1,24 +1,34 @@
 """Fig. 3 reproduction: DRAM vs HBM congestion and memory placement on a
-4×4 mesh (flow-level simulator standing in for ASTRA-sim)."""
+4×4 mesh (flow-level simulator standing in for ASTRA-sim).
+
+Grid driving (benchmarks/README.md): the (memory × placement × NoP-BW)
+grid is a generic ``sweep.grid`` product run through ``sweep.run_grid``
+(the netsim is event-driven — no batched-eval path).
+"""
 from __future__ import annotations
 
+from repro.core import sweep
 from repro.core.netsim import fig3_case
 
-from .common import emit, save_json, timed
+from .common import emit, save_json
 
 GB = 1e9
 
 
 def main():
     results = {}
-    for mem in ("dram", "hbm"):
-        for place in ("peripheral", "central"):
-            for bw in (60 * GB, 120 * GB):
-                out, us = timed(fig3_case, mem, place, bw_nop=bw)
-                key = f"{mem}_{place}_nop{int(bw/GB)}"
-                results[key] = out["latency"]
-                emit(f"fig3/{key}", us,
-                     f"latency_ms={out['latency']*1e3:.2f}")
+
+    def report(pt, out, us):
+        key = f"{pt['memory']}_{pt['placement']}_nop{int(pt['bw_nop'] / GB)}"
+        results[key] = out["latency"]
+        emit(f"fig3/{key}", us, f"latency_ms={out['latency']*1e3:.2f}")
+
+    sweep.run_grid(
+        sweep.grid(memory=("dram", "hbm"),
+                   placement=("peripheral", "central"),
+                   bw_nop=(60 * GB, 120 * GB)),
+        fig3_case, emit=report)
+
     # headline claims
     nop_scale = results["hbm_peripheral_nop60"] / \
         results["hbm_peripheral_nop120"]

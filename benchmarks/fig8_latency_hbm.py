@@ -5,43 +5,66 @@ packaging types with HBM.
 Paper claims: GA/MIQP beat LS on every type (geo-means 13%/45%, 5%/15%,
 9%/43%, 19%/25% for A–D); SIMBA-like is slightly *worse* than LS; the
 GA–MIQP gap is smallest on type D (near-uniform memory distance).
+
+Grid driving (benchmarks/README.md): LS baselines for the whole
+(type × workload) grid come from the batched sweep engine — one compiled
+call per shape group, cached process-wide; the solver points (GA/MIQP
+solves cannot batch across configs) go through ``sweep.run_grid``.
 """
 from __future__ import annotations
 
-from repro.core import make_hw, optimize
+from repro.core import make_hw, optimize, sweep
 from repro.core.ga import GAConfig
 from repro.core.miqp import MIQPConfig
 from repro.graphs import WORKLOADS
 
-from .common import emit, geomean, save_json, timed
+from .common import emit, geomean, save_json
 
 GA_CFG = GAConfig(generations=60, population=64)          # ~paper budget
 MIQP_CFG = MIQPConfig(time_limit=60)
+METHOD_KW = {"simba": {},
+             "ga": {"ga_config": GA_CFG},
+             "miqp": {"miqp_config": MIQP_CFG}}
 
 
-def main(fast: bool = False):
+def main(fast: bool = False, backend: str = "jax"):
     workloads = {k: fn(batch=1) for k, fn in WORKLOADS.items()}
     if fast:
         workloads = {k: workloads[k] for k in ("alexnet", "hydranet")}
+    hws = {t: make_hw(t, 4, "hbm") for t in "ABCD"}
+
+    # LS baselines: one batched + cached sweep over the full grid.
+    base_grid = sweep.grid(t=list(hws), wname=list(workloads))
+    base_recs = sweep.eval_sweep(
+        [sweep.EvalPoint(workloads[p["wname"]], hws[p["t"]])
+         for p in base_grid],
+        backend=backend)
+    base = {(p["t"], p["wname"]): r["latency"]
+            for p, r in zip(base_grid, base_recs)}
+
     results = {}
-    for t in "ABCD":
-        hw = make_hw(t, 4, "hbm")
-        speed = {m: [] for m in ("simba", "ga", "miqp")}
-        for wname, task in workloads.items():
-            base = optimize(task, hw, "baseline").latency
-            for method, cfgkw in (("simba", {}),
-                                  ("ga", {"ga_config": GA_CFG}),
-                                  ("miqp", {"miqp_config": MIQP_CFG})):
-                r, us = timed(optimize, task, hw, method, "latency",
-                              **cfgkw)
-                sp = base / r.latency
-                speed[method].append(sp)
-                results[f"{t}/{wname}/{method}"] = sp
-                emit(f"fig8/{t}/{wname}/{method}", us,
-                     f"speedup={sp:.3f}x")
-        for m in speed:
+    speed = {(t, m): [] for t in hws for m in METHOD_KW}
+
+    def solve(t, wname, method):
+        return optimize(workloads[wname], hws[t], method, "latency",
+                        backend=backend, **METHOD_KW[method])
+
+    def report(pt, r, us):
+        t, wname, method = pt["t"], pt["wname"], pt["method"]
+        sp = base[(t, wname)] / r.latency
+        speed[(t, method)].append(sp)
+        results[f"{t}/{wname}/{method}"] = sp
+        emit(f"fig8/{t}/{wname}/{method}", us, f"speedup={sp:.3f}x")
+
+    sweep.run_grid(
+        sweep.grid(t=list(hws), wname=list(workloads),
+                   method=list(METHOD_KW)),
+        solve, emit=report)
+
+    for t in hws:
+        for m in METHOD_KW:
             emit(f"fig8/{t}/geomean/{m}", 0.0,
-                 f"{(geomean(speed[m]) - 1) * 100:+.1f}% vs LS")
+                 f"{(geomean(speed[(t, m)]) - 1) * 100:+.1f}% vs LS")
     save_json("fig8", results)
 
 

@@ -5,47 +5,65 @@ Paper claims: MIQP geo-mean 55.5% (latency) / 60.3% (EDP) over LS; GA
 24.2% / 35.1%. MIQP > GA, with AlexNet gaining more on larger systems
 (redistribution savings grow with scale); GA is relatively stronger on
 EDP than latency.
+
+Grid driving (benchmarks/README.md): the (grid × workload) LS references
+are one batched sweep (latency and EDP come out of the same records);
+the (objective × grid × workload × method) solver grid goes through
+``sweep.run_grid``.
 """
 from __future__ import annotations
 
-from repro.core import make_hw, optimize
+from repro.core import make_hw, optimize, sweep
 from repro.core.ga import GAConfig
 from repro.core.miqp import MIQPConfig
 from repro.graphs import WORKLOADS
 
-from .common import emit, geomean, save_json, timed
+from .common import emit, geomean, save_json
 
 GA_CFG = GAConfig(generations=60, population=64)
 MIQP_CFG = MIQPConfig(time_limit=60, edp_sweep=3)
+METHOD_KW = {"ga": {"ga_config": GA_CFG}, "miqp": {"miqp_config": MIQP_CFG}}
 
 
-def main(fast: bool = False):
+def main(fast: bool = False, backend: str = "jax"):
     grids = (4, 8) if fast else (4, 8, 16)
     wnames = ("alexnet", "hydranet") if fast else tuple(WORKLOADS)
+    tasks = {w: WORKLOADS[w](batch=1) for w in wnames}
+    hws = {g: make_hw("A", g, "hbm") for g in grids}
+
+    base_grid = sweep.grid(g=grids, wname=wnames)
+    base_recs = sweep.eval_sweep(
+        [sweep.EvalPoint(tasks[p["wname"]], hws[p["g"]])
+         for p in base_grid],
+        backend=backend)
+    ref = {(p["g"], p["wname"]): r for p, r in zip(base_grid, base_recs)}
+
     results = {}
-    for objective in ("latency", "edp"):
-        fig = "fig9" if objective == "latency" else "fig10"
-        sp_all = {"ga": [], "miqp": []}
-        for grid in grids:
-            hw = make_hw("A", grid, "hbm")
-            for wname in wnames:
-                task = WORKLOADS[wname](batch=1)
-                base = optimize(task, hw, "baseline")
-                ref = (base.baseline.latency if objective == "latency"
-                       else base.baseline.edp)
-                for method, kw in (("ga", {"ga_config": GA_CFG}),
-                                   ("miqp", {"miqp_config": MIQP_CFG})):
-                    r, us = timed(optimize, task, hw, method, objective,
-                                  **kw)
-                    val = r.latency if objective == "latency" else r.edp
-                    sp = ref / val
-                    sp_all[method].append(sp)
-                    results[f"{fig}/{grid}/{wname}/{method}"] = sp
-                    emit(f"{fig}/{grid}x{grid}/{wname}/{method}", us,
-                         f"speedup={sp:.3f}x")
-        for m in sp_all:
+    sp_all = {(o, m): [] for o in ("latency", "edp") for m in METHOD_KW}
+
+    def solve(objective, g, wname, method):
+        return optimize(tasks[wname], hws[g], method, objective,
+                        backend=backend, **METHOD_KW[method])
+
+    def report(pt, r, us):
+        o, g, wname, m = pt["objective"], pt["g"], pt["wname"], pt["method"]
+        fig = "fig9" if o == "latency" else "fig10"
+        val = r.latency if o == "latency" else r.edp
+        sp = ref[(g, wname)][o] / val
+        sp_all[(o, m)].append(sp)
+        results[f"{fig}/{g}/{wname}/{m}"] = sp
+        emit(f"{fig}/{g}x{g}/{wname}/{m}", us, f"speedup={sp:.3f}x")
+
+    sweep.run_grid(
+        sweep.grid(objective=("latency", "edp"), g=grids, wname=wnames,
+                   method=list(METHOD_KW)),
+        solve, emit=report)
+
+    for o in ("latency", "edp"):
+        fig = "fig9" if o == "latency" else "fig10"
+        for m in METHOD_KW:
             emit(f"{fig}/geomean/{m}", 0.0,
-                 f"{(geomean(sp_all[m]) - 1) * 100:+.1f}% vs LS "
+                 f"{(geomean(sp_all[(o, m)]) - 1) * 100:+.1f}% vs LS "
                  f"(paper: GA +24.2/35.1%, MIQP +55.5/60.3%)")
     save_json("fig9_10", results)
 

@@ -9,6 +9,11 @@ EXPERIMENTS.md §Perf.
 
 Run (512 virtual devices):
     PYTHONPATH=src python -m benchmarks.perf_iterations --cell smollm
+
+The ``ga_fitness`` cell benchmarks the analytical-evaluator backends
+instead (numpy reference vs jax jit+vmap, DESIGN.md §8) — the hot loop
+of the paper's GA search:
+    PYTHONPATH=src python -m benchmarks.perf_iterations --cell ga_fitness
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
@@ -82,8 +87,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", required=True,
                     help="smollm | internlm2 | deepseek (the three chosen "
-                         "hillclimb cells)")
+                         "hillclimb cells) | ga_fitness (analytical-"
+                         "evaluator backend shootout, DESIGN.md §8)")
     args = ap.parse_args()
+    if args.cell == "ga_fitness":
+        run_ga_fitness()     # no device mesh needed
+        return
     mesh = make_production_mesh()
     dp = ("data",)
     del dp
@@ -104,6 +113,71 @@ def main():
         run_minicpm3(mesh)
     else:
         raise SystemExit("unknown cell")
+
+
+def run_ga_fitness():
+    """Backend shootout for the GA fitness hot loop (DESIGN.md §8).
+
+    Measures steady-state ``Evaluator.evaluate_batch`` throughput (numpy
+    vs jax, post-warmup) at GA population scales, plus a fixed-seed
+    ``run_ga`` on both backends to confirm identical trajectories. The
+    acceptance bar is ≥2× on the jax path at search-scale populations
+    (P ≥ 1024); small populations stay dispatch-bound and numpy remains
+    the right default there.
+    """
+    import json
+    import time
+
+    import numpy as np
+
+    from repro.core import EvalOptions, Evaluator, make_hw, \
+        uniform_partition
+    from repro.core.ga import GAConfig, run_ga
+    from repro.graphs import WORKLOADS
+
+    task = WORKLOADS["alexnet"](batch=1)
+    hw = make_hw("A", 4, "hbm", diagonal_links=True)
+    opts = EvalOptions(redistribution=True, async_exec=True)
+    n = len(task)
+    rng = np.random.default_rng(0)
+    rows = []
+    for P in (256, 1024, 4096):
+        base = uniform_partition(task, 4, 4)
+        Px = np.repeat(base.Px[None], P, 0).astype(float)
+        Py = np.repeat(base.Py[None], P, 0).astype(float)
+        co = rng.integers(0, 4, (P, n))
+        rd = (rng.random((P, n)) < 0.5).astype(float)
+        ms = {}
+        for backend in ("numpy", "jax"):
+            ev = Evaluator(task, hw, opts, backend=backend)
+            ev.evaluate_batch(Px, Py, co, rd)          # warm / compile
+            t0 = time.perf_counter()
+            k = 0
+            while time.perf_counter() - t0 < 1.0:
+                ev.evaluate_batch(Px, Py, co, rd)
+                k += 1
+            ms[backend] = (time.perf_counter() - t0) / k * 1e3
+        sp = ms["numpy"] / ms["jax"]
+        rows.append({"population": P, "numpy_ms": ms["numpy"],
+                     "jax_ms": ms["jax"], "speedup": sp})
+        print(f"[perf] ga_fitness P={P}: numpy={ms['numpy']:.2f}ms "
+              f"jax={ms['jax']:.2f}ms speedup={sp:.2f}x")
+
+    cfg = GAConfig(generations=15, population=64, seed=7)
+    rn = run_ga(task, hw, "latency", opts, cfg, backend="numpy")
+    rj = run_ga(task, hw, "latency", opts, cfg, backend="jax")
+    same = bool(np.allclose(rn.history, rj.history, rtol=1e-9)
+                and np.array_equal(rn.partition.Px, rj.partition.Px))
+    best = max(r["speedup"] for r in rows)
+    verdict = ("confirmed (>=2x at search scale)" if best >= 2.0
+               else "refuted (<2x)")
+    print(f"[perf] ga_fitness trajectories identical: {same}; "
+          f"best speedup {best:.2f}x -> {verdict}")
+    out = {"rows": rows, "trajectories_identical": same,
+           "best_speedup": best, "verdict": verdict}
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "ga_fitness.json"), "w") as f:
+        json.dump(out, f, indent=1)
 
 
 def run_smollm(mesh):

@@ -4,6 +4,13 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run            # full (slow)
     PYTHONPATH=src python -m benchmarks.run --fast     # reduced sweep
+    PYTHONPATH=src python -m benchmarks.run --backend numpy   # reference
+
+All figure scripts drive their grids through :mod:`repro.core.sweep`:
+LS baselines are evaluated in batched compiled calls and cached
+process-wide, so figures sharing workloads (fig8/fig9/fig12) never
+re-evaluate a baseline. ``--backend`` picks the evaluator engine
+(DESIGN.md §8); numpy is the bit-identical reference path.
 """
 from __future__ import annotations
 
@@ -21,19 +28,25 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (fig3,fig8,fig9_10,"
                          "fig11,fig12,fig13,roofline)")
+    ap.add_argument("--backend", default="jax", choices=("numpy", "jax"),
+                    help="evaluator backend for baselines + GA fitness "
+                         "(DESIGN.md §8); backends agree to float64 "
+                         "round-off (rtol 1e-9), jax is faster on large "
+                         "sweeps")
     args = ap.parse_args()
 
     args.fast = not args.full
+    be = args.backend
     from . import (fig3_motivation, fig8_latency_hbm, fig9_10_scaling,
                    fig11_pipelining, fig12_lowbw, fig13_ablation, roofline)
 
     benches = {
         "fig3": lambda: fig3_motivation.main(),
-        "fig8": lambda: fig8_latency_hbm.main(fast=args.fast),
-        "fig9_10": lambda: fig9_10_scaling.main(fast=args.fast),
-        "fig11": lambda: fig11_pipelining.main(fast=args.fast),
-        "fig12": lambda: fig12_lowbw.main(fast=args.fast),
-        "fig13": lambda: fig13_ablation.main(fast=args.fast),
+        "fig8": lambda: fig8_latency_hbm.main(fast=args.fast, backend=be),
+        "fig9_10": lambda: fig9_10_scaling.main(fast=args.fast, backend=be),
+        "fig11": lambda: fig11_pipelining.main(fast=args.fast, backend=be),
+        "fig12": lambda: fig12_lowbw.main(fast=args.fast, backend=be),
+        "fig13": lambda: fig13_ablation.main(fast=args.fast, backend=be),
         "roofline": lambda: roofline.main(),
     }
     only = args.only.split(",") if args.only else list(benches)

@@ -5,7 +5,11 @@ Layers:
     hop-count topology (incl. diagonal links, Sec. 5.1).
   * :mod:`repro.core.workload` — GEMM-sequence tasks and partitions.
   * :mod:`repro.core.evaluator` — end-to-end latency/energy/EDP model
-    (Sec. 4.3/4.4) with redistribution + async execution (Sec. 5.2/5.3).
+    (Sec. 4.3/4.4) with redistribution + async execution (Sec. 5.2/5.3);
+    numpy reference backend plus a ``jax.jit``/``vmap`` backend
+    (:mod:`repro.core.evaluator_jax`, DESIGN.md §8).
+  * :mod:`repro.core.sweep` — batched (HWConfig × Task × EvalOptions)
+    design-space sweeps with result caching (DESIGN.md §9).
   * :mod:`repro.core.ga` / :mod:`repro.core.miqp` — the two solvers
     (Sec. 6.2/6.3); :mod:`repro.core.simba` — the heuristic baseline.
   * :mod:`repro.core.pipelining` — RCPSP cross-sample pipelining
@@ -14,6 +18,7 @@ Layers:
   * :mod:`repro.core.api` — one-call front door.
 """
 from .api import ScheduleResult, baseline_result, optimize  # noqa: F401
-from .evaluator import EvalOptions, EvalResult, Evaluator  # noqa: F401
+from .evaluator import BACKENDS, EvalOptions, EvalResult, Evaluator  # noqa: F401
 from .hw import HWConfig, MCMType, Topology, make_hw  # noqa: F401
+from .sweep import EvalPoint, eval_sweep  # noqa: F401
 from .workload import GemmOp, Partition, Task, uniform_partition  # noqa: F401

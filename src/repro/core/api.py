@@ -18,6 +18,7 @@ from .hw import HWConfig
 from .miqp import MIQPConfig, run_miqp
 from .pipelining import PipelineResult, pipeline_batch
 from .simba import simba_partition
+from .sweep import EvalPoint, eval_sweep
 from .workload import Partition, Task, uniform_partition
 
 __all__ = ["ScheduleResult", "optimize", "baseline_result", "METHODS"]
@@ -54,8 +55,8 @@ class ScheduleResult:
 
 
 def _polish(task: Task, hw: HWConfig, opts: EvalOptions, part: Partition,
-            rd: np.ndarray, objective: str, rounds: int = 2
-            ) -> tuple[Partition, np.ndarray]:
+            rd: np.ndarray, objective: str, rounds: int = 2,
+            backend: str = "numpy") -> tuple[Partition, np.ndarray]:
     """Coordinate descent on variables MIQP keeps fixed or cannot see:
     collector columns, per-pair redistribution bits, and *placement* of the
     per-row/column shares. The MIQP solve uses the paper's sync
@@ -63,7 +64,7 @@ def _polish(task: Task, hw: HWConfig, opts: EvalOptions, part: Partition,
     chiplet row carries which share — under fused (async) execution the
     busiest-compute row should sit nearest the entrance. Reordering a
     partition vector is sum-preserving, so these moves stay feasible."""
-    ev = Evaluator(task, hw, opts)
+    ev = Evaluator(task, hw, opts, backend=backend)
     key = "edp" if objective == "edp" else "latency"
 
     def score(p, m):
@@ -113,12 +114,21 @@ def _polish(task: Task, hw: HWConfig, opts: EvalOptions, part: Partition,
     return part, rd
 
 
-def baseline_result(task: Task, hw: HWConfig) -> EvalResult:
+def baseline_result(task: Task, hw: HWConfig,
+                    backend: str = "numpy") -> EvalResult:
     """Layer-Sequential baseline: uniform partitioning, no optimizations
-    (Table 3 row 1). Evaluated on the plain mesh (no diagonal links)."""
+    (Table 3 row 1). Evaluated on the plain mesh (no diagonal links).
+
+    Routed through :mod:`repro.core.sweep` so repeated baselines — every
+    ``optimize`` call scores against one, and the figure sweeps share
+    workloads — are evaluated once per process (DESIGN.md §9)."""
     hw0 = hw.replace(diagonal_links=False)
-    ev = Evaluator(task, hw0, EvalOptions())
-    return ev.evaluate(uniform_partition(task, hw.X, hw.Y))
+    rec = eval_sweep([EvalPoint(task, hw0)], backend=backend)[0]
+    return EvalResult(
+        latency=rec["latency"], energy=rec["energy"], edp=rec["edp"],
+        t_in=rec["t_in"], t_comp=rec["t_comp"], t_out=rec["t_out"],
+        redist=np.zeros(len(task), dtype=bool),
+    )
 
 
 def optimize(
@@ -129,31 +139,45 @@ def optimize(
     options: EvalOptions | None = None,
     ga_config: GAConfig | None = None,
     miqp_config: MIQPConfig | None = None,
+    backend: str | None = None,
 ) -> ScheduleResult:
     """Run one scheduling scheme of Table 3 and score it against the LS
     baseline. ``ga``/``miqp`` enable the co-optimizations (diagonal links
     + redistribution; GA additionally uses async fusion); ``baseline`` and
-    ``simba`` run without them, as in the paper's methodology."""
-    base = baseline_result(task, hw)
+    ``simba`` run without them, as in the paper's methodology.
+
+    ``backend`` selects the evaluator engine (DESIGN.md §8) for the GA
+    fitness loop, the baseline, and every scoring/polish pass; backends
+    agree to float64 round-off (rtol 1e-9; identical GA trajectories
+    under a fixed seed on CPU). ``None`` means numpy, except the ``ga``
+    branch which follows ``ga_config.backend`` end-to-end (fitness and
+    scoring always use the same engine)."""
+    scoring_backend = backend or "numpy"
+    base = baseline_result(task, hw, backend=scoring_backend)
     t0 = time.perf_counter()
     if method == "baseline":
         hw0 = hw.replace(diagonal_links=False)
         part = uniform_partition(task, hw.X, hw.Y)
-        ev = Evaluator(task, hw0, EvalOptions())
+        ev = Evaluator(task, hw0, EvalOptions(), backend=scoring_backend)
         res = ev.evaluate(part)
         rd = np.zeros(len(task), dtype=bool)
     elif method == "simba":
         hw0 = hw.replace(diagonal_links=False)
         part = simba_partition(task, hw0)
-        ev = Evaluator(task, hw0, EvalOptions())
+        ev = Evaluator(task, hw0, EvalOptions(), backend=scoring_backend)
         res = ev.evaluate(part)
         rd = np.zeros(len(task), dtype=bool)
     elif method == "ga":
         opts = options or EvalOptions(redistribution=True, async_exec=True)
         hw1 = hw.replace(diagonal_links=True)
-        out = run_ga(task, hw1, objective, opts, ga_config or GAConfig())
+        cfg = ga_config or GAConfig()
+        # Score with the engine the GA fitness actually ran on, so a
+        # GAConfig(backend="jax") caller never silently mixes engines.
+        ga_backend = backend or cfg.backend
+        out = run_ga(task, hw1, objective, opts, cfg, backend=ga_backend)
         part, rd = out.partition, out.redist_mask
-        res = Evaluator(task, hw1, opts).evaluate(part, rd)
+        res = Evaluator(task, hw1, opts,
+                        backend=ga_backend).evaluate(part, rd)
     elif method == "miqp":
         # Solve under the paper's sync approximation (Sec. 6.3.2 adds max()
         # sync per comm/comp pair), then score the resulting partition under
@@ -166,8 +190,10 @@ def optimize(
         out = run_miqp(task, hw1, objective, solve_opts,
                        miqp_config or MIQPConfig())
         part, rd = out.partition, out.redist_mask
-        part, rd = _polish(task, hw1, opts, part, rd, objective)
-        res = Evaluator(task, hw1, opts).evaluate(part, rd)
+        part, rd = _polish(task, hw1, opts, part, rd, objective,
+                           backend=scoring_backend)
+        res = Evaluator(task, hw1, opts,
+                        backend=scoring_backend).evaluate(part, rd)
     else:
         raise ValueError(f"unknown method {method!r}; one of {METHODS}")
     dt = time.perf_counter() - t0

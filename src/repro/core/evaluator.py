@@ -4,9 +4,16 @@ Implements ``Cost = Sche({comp(*_i), comm(*_i)})`` (eq. 3–6) for a Task on
 an HWConfig under a candidate Partition, returning latency, energy and EDP
 plus a per-op breakdown that the RCPSP pipeliner (Sec. 5.4) consumes.
 
-All math is vectorized numpy with a leading *population* axis so that the
+All math is vectorized with a leading *population* axis so that the
 genetic algorithm (Sec. 6.2) evaluates its whole population in one call.
 float64 throughout — cycle counts overflow float32 mantissas.
+
+Two interchangeable backends (DESIGN.md §8):
+  * ``backend="numpy"`` — the reference implementation (this module);
+  * ``backend="jax"`` — a ``jax.jit`` + ``vmap`` port
+    (:mod:`repro.core.evaluator_jax`) that must match the reference
+    within float64 round-off; the parity suite in
+    ``tests/test_backend_parity.py`` enforces the contract.
 
 Modeling conventions (documented in DESIGN.md §5):
   * Off-chip and NoP serialization per phase combine as ``max`` — the
@@ -65,10 +72,25 @@ def _ceil_div(a, b):
     return -(-a // b) if isinstance(a, int) else np.ceil(a / b)
 
 
-class Evaluator:
-    """Evaluates partitions for one (Task, HWConfig, EvalOptions) triple."""
+BACKENDS = ("numpy", "jax")
 
-    def __init__(self, task: Task, hw: HWConfig, options: EvalOptions = EvalOptions()):
+
+class Evaluator:
+    """Evaluates partitions for one (Task, HWConfig, EvalOptions) triple.
+
+    ``backend`` selects the execution engine: ``"numpy"`` (reference) or
+    ``"jax"`` (jit+vmap, DESIGN.md §8). Both produce identical result
+    dicts of float64 numpy arrays.
+    """
+
+    def __init__(self, task: Task, hw: HWConfig,
+                 options: EvalOptions = EvalOptions(),
+                 backend: str = "numpy"):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+        self.backend = backend
+        self._jax_consts = None         # lazy EvalConsts cache (jax backend)
+        self._jax_device_consts = None  # device-resident copy of the above
         self.task = task
         self.hw = hw
         self.opts = options
@@ -147,6 +169,24 @@ class Evaluator:
         Py: np.ndarray,      # [P, n, Y] float
         collectors: np.ndarray,  # [P, n] int
         redist: np.ndarray,  # [P, n] float in {0,1}: redistribute after op i
+    ) -> dict[str, np.ndarray]:
+        if self.backend == "jax":
+            from . import evaluator_jax
+            if self._jax_device_consts is None:
+                self._jax_device_consts = evaluator_jax.to_device(self.consts())
+            return evaluator_jax.batch_evaluate(
+                self._jax_device_consts, self.opts, Px, Py, collectors, redist)
+        return self._evaluate_batch_numpy(Px, Py, collectors, redist)
+
+    def consts(self):
+        """Constant bundle for the JAX backend / sweep engine (cached)."""
+        if self._jax_consts is None:
+            from . import evaluator_jax
+            self._jax_consts = evaluator_jax.consts_from_evaluator(self)
+        return self._jax_consts
+
+    def _evaluate_batch_numpy(
+        self, Px, Py, collectors, redist
     ) -> dict[str, np.ndarray]:
         hw, top = self.hw, self.top
         B, bw_nop, bw_ent = self.B, self.bw_nop, self.bw_ent

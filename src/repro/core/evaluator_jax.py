@@ -1,0 +1,287 @@
+"""JAX backend for the analytical evaluator — jit + vmap over populations.
+
+Mirrors :meth:`repro.core.evaluator.Evaluator.evaluate_batch` (eqs. 3–12)
+op-for-op so the two backends agree to float64 round-off; the numpy
+implementation stays the reference and the parity suite
+(``tests/test_backend_parity.py``) asserts the contract (DESIGN.md §8).
+
+Structure:
+  * every per-(Task, HWConfig) constant — GEMM dims, hop matrices,
+    entrance masks, Table-2 scalars — travels in an :class:`EvalConsts`
+    dict pytree *argument* rather than a trace-time closure, so one
+    compiled executable serves every config with the same shape signature
+    (the sweep engine in :mod:`repro.core.sweep` stacks these along a grid
+    axis and vmaps over them);
+  * :func:`population_fn` = ``jit(vmap(single-candidate))`` — the GA
+    fitness path; :func:`grid_fn` adds a second vmap over the grid axis;
+  * all entry points run under ``jax.experimental.enable_x64()`` — cycle
+    counts overflow float32 mantissas (same float64 rule as the numpy
+    path) and the scope keeps x64 from leaking into the rest of the
+    repo's float32 jax code.
+
+Only the modeling toggles (:class:`EvalOptions` fields) are static: they
+select code paths, so each of the 2×2×2 combinations compiles once per
+shape signature and is cached in ``_POPULATION_FNS`` / ``_GRID_FNS``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .evaluator import EvalOptions
+
+__all__ = [
+    "EvalConsts",
+    "consts_from_evaluator",
+    "population_fn",
+    "grid_fn",
+    "batch_evaluate",
+]
+
+#: dict pytree of per-(Task, HWConfig) constants; see CONST_KEYS.
+EvalConsts = Dict[str, Any]
+
+#: Array-valued keys ([n]: per-op, [X,Y]: per-chiplet, [E...]: per-entrance)
+#: followed by the 0-d scalar keys. Order is the canonical stacking order
+#: used by the sweep engine.
+CONST_KEYS = (
+    # per-op [n]
+    "M", "K", "N", "sync", "w_scale", "epilogue", "chain_valid",
+    # per-chiplet [X, Y]
+    "hA", "hW", "h_min",
+    # per-entrance
+    "row_mask", "col_mask", "ent_mask", "ent_pos", "is3d", "links",
+    # scalars (0-d)
+    "B", "bw_nop", "bw_ent", "freq", "R", "C",
+    "e_sram", "e_mem", "e_nop", "e_mac",
+)
+
+
+def consts_from_evaluator(ev) -> EvalConsts:
+    """Extract the constant bundle from a (numpy) Evaluator instance.
+
+    Returns plain float64/bool numpy arrays — conversion to device arrays
+    happens inside the x64 scope at call time.
+    """
+    hw = ev.hw
+    f8 = lambda a: np.asarray(a, dtype=np.float64)
+    return {
+        "M": f8(ev.M), "K": f8(ev.K), "N": f8(ev.N),
+        "sync": f8(ev.sync),
+        "w_scale": f8(ev.w_scale), "epilogue": f8(ev.epilogue),
+        "chain_valid": f8(ev.chain_valid),
+        "hA": f8(ev.hA), "hW": f8(ev.hW), "h_min": f8(ev.h_min),
+        "row_mask": f8(ev.row_mask), "col_mask": f8(ev.col_mask),
+        "ent_mask": f8(ev.ent_mask), "ent_pos": f8(ev.ent_pos),
+        "is3d": np.asarray(ev.top.entrance_is_3d, dtype=bool),
+        "links": f8(ev.links),
+        "B": f8(ev.B), "bw_nop": f8(ev.bw_nop), "bw_ent": f8(ev.bw_ent),
+        "freq": f8(ev.freq),
+        "R": f8(float(hw.R)), "C": f8(float(hw.C)),
+        "e_sram": f8(hw.e_sram_bit * 8.0), "e_mem": f8(hw.e_mem_bit * 8.0),
+        "e_nop": f8(hw.e_nop_bit_hop * 8.0), "e_mac": f8(hw.e_mac_cycle),
+    }
+
+
+def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
+                 redistribution: bool, async_exec: bool, energy_mode: str):
+    """One candidate: Px [n,X], Py [n,Y], collectors [n], redist [n].
+
+    Line-for-line port of ``Evaluator.evaluate_batch`` with the population
+    axis removed (vmap adds it back). Static python ints n/X/Y come from
+    the traced shapes; R/C/bandwidths stay traced so compilations are
+    shared across HWConfigs of equal shape.
+    """
+    n, X = Px.shape
+    Y = Py.shape[1]
+    B, bw_nop, bw_ent = c["B"], c["bw_nop"], c["bw_ent"]
+    R, C = c["R"], c["C"]
+    M, K, N = c["M"], c["K"], c["N"]
+    sync = c["sync"]
+
+    redist = redist * c["chain_valid"]
+    if not redistribution:
+        redist = jnp.zeros_like(redist)
+    # redist_in[i] = output of op i-1 was redistributed (A already local).
+    redist_in = jnp.concatenate([jnp.zeros_like(redist[:1]), redist[:-1]])
+    keepA = 1.0 - redist_in
+    redist_out = redist
+
+    # ---------------------------------------------------- data volumes
+    chunk = Px[:, :, None] * Py[:, None, :] * B                # [n,X,Y]
+    inA = Px * K[:, None] * B                                  # [n,X]
+    inW = Py * (K * c["w_scale"])[:, None] * B                 # [n,Y]
+
+    # ----------------------------------------------- phase 1: data load
+    A_e = jnp.einsum("ex,nx->ne", c["row_mask"], inA)
+    W_e = jnp.einsum("ey,ny->ne", c["col_mask"], inW)
+    t_off_in = ((keepA[:, None] * A_e + W_e) / bw_ent).max(axis=-1)
+
+    tA_xy = inA[:, :, None] * c["hA"][None]                    # bytes*hops
+    tW_xy = inW[:, None, :] * c["hW"][None]
+    nop_in_xy = (keepA[:, None, None] * tA_xy + tW_xy) / bw_nop
+    t_nop_in = nop_in_xy.max(axis=(-1, -2))
+    t_in = jnp.maximum(t_off_in, t_nop_in)
+
+    # -------------------------------------------------- phase 2: compute
+    fill = (2.0 * R + C + K - 2.0)[:, None, None]
+    tiles = jnp.ceil(Px / R)[:, :, None] * jnp.ceil(Py / C)[:, None, :]
+    cyc = fill * tiles
+    cyc = cyc + c["epilogue"][:, None, None] * Px[:, :, None] \
+        * Py[:, None, :] / C
+    t_comp_xy = cyc / c["freq"]
+    t_comp = t_comp_xy.max(axis=(-1, -2))
+
+    # ------------------------------------------- phase 3a: offload path
+    out_e = jnp.einsum("exy,nxy->ne", c["ent_mask"], chunk)
+    out_at_ent = jnp.einsum("exy,nxy->ne", c["ent_pos"], chunk)
+    nonlocal_out = out_e - jnp.where(c["is3d"][None, :], out_at_ent, 0.0)
+    links = c["links"][None, :]
+    links_safe = jnp.where(links > 0, links, 1.0)
+    t_collect = jnp.where(
+        links > 0, nonlocal_out / (links_safe * bw_nop), 0.0
+    ).max(axis=-1)
+    t_off_out = (out_e / bw_ent).max(axis=-1)
+    t_offload = jnp.maximum(t_collect, t_off_out)
+
+    # ----------------------------------- phase 3b: redistribution path
+    yidx = jnp.arange(Y)[None, :]
+    cc = collectors[:, None]
+    left_m = (yidx < cc).astype(jnp.float64)
+    right_m = (yidx > cc).astype(jnp.float64)
+    left_x = jnp.einsum("nxy,ny->nx", chunk, left_m)
+    right_x = jnp.einsum("nxy,ny->nx", chunk, right_m)
+    t1 = jnp.maximum(left_x, right_x).max(axis=-1) / bw_nop
+    rowbytes = Px * N[:, None] * B                             # [n,X]
+    t2 = rowbytes.max(axis=-1) / bw_nop
+    cumf = jnp.cumsum(Px, axis=-1) / jnp.maximum(M[:, None], 1.0)
+    cumf_next = jnp.concatenate([cumf[1:], cumf[-1:]], axis=0)
+    if X > 1:
+        crossing = jnp.abs(cumf - cumf_next)[:, : X - 1] * M[:, None]
+        cross_bytes = crossing * N[:, None] * B
+        t3 = cross_bytes.max(axis=-1) / bw_nop
+    else:
+        cross_bytes = jnp.zeros_like(cumf[:, :0])
+        t3 = jnp.zeros_like(t1)
+    t_redist = t1 + t2 + t3
+
+    t_out = jnp.where(redist_out > 0, t_redist, t_offload)
+
+    t_sync = sync * (Px.max(axis=-1) * 4.0 * B * max(Y - 1, 1)) / bw_nop
+
+    # ----------------------------------------------------- schedule
+    if async_exec:
+        fused_xy = nop_in_xy + t_comp_xy
+        t_fused = jnp.maximum(fused_xy.max(axis=(-1, -2)), t_off_in)
+        core = jnp.where(sync > 0, t_in + t_comp, t_fused)
+    else:
+        core = t_in + t_comp
+    t_ops = core + t_out + t_sync
+    latency = t_ops.sum()
+
+    # ------------------------------------------------------- energy
+    sram_bytes = (Y * inA.sum(axis=-1) + X * inW.sum(axis=-1)
+                  + chunk.sum(axis=(-1, -2)))
+    E_sram = c["e_sram"] * sram_bytes.sum()
+
+    if energy_mode == "paper":
+        E_mac = c["e_mac"] * (cyc.max(axis=(-1, -2)) * R * C * X * Y).sum()
+    else:
+        E_mac = c["e_mac"] * (cyc.sum(axis=(-1, -2)) * R * C).sum()
+
+    mem_bytes = (keepA[:, None] * A_e + W_e
+                 + (1.0 - redist_out)[:, None] * out_e).sum()
+    E_mem = c["e_mem"] * mem_bytes
+
+    load_bh = (keepA[:, None, None] * tA_xy + tW_xy).sum(axis=(-1, -2))
+    collect_bh = (chunk * c["h_min"][None]).sum(axis=(-1, -2))
+    red_bh = (
+        (left_x + right_x).sum(axis=-1)
+        + rowbytes.sum(axis=-1) * max(Y - 1, 1)
+        + (cross_bytes.sum(axis=-1) * Y if X > 1 else 0.0)
+    )
+    nop_bh = load_bh + jnp.where(redist_out > 0, red_bh, collect_bh)
+    E_nop = c["e_nop"] * nop_bh.sum()
+
+    energy = E_sram + E_mac + E_mem + E_nop
+    return {
+        "latency": latency,
+        "energy": energy,
+        "edp": energy * latency,
+        "t_in": t_in,
+        "t_comp": t_comp,
+        "t_out": t_out,
+        "E_sram": E_sram,
+        "E_mac": E_mac,
+        "E_mem": E_mem,
+        "E_nop": E_nop,
+    }
+
+
+def to_device(consts: EvalConsts) -> EvalConsts:
+    """Convert a constant bundle to float64 device arrays once, so repeated
+    population calls skip host→device transfer (no-op on device arrays)."""
+    with jax.experimental.enable_x64():
+        return {k: jnp.asarray(v) for k, v in consts.items()}
+
+
+def _static_key(opts: EvalOptions) -> tuple:
+    return (bool(opts.redistribution), bool(opts.async_exec),
+            opts.energy_mode)
+
+
+@functools.lru_cache(maxsize=None)
+def population_fn(redistribution: bool, async_exec: bool, energy_mode: str):
+    """``jit(vmap(candidate))``: (consts, Px[P,n,X], Py[P,n,Y],
+    collectors[P,n], redist[P,n]) → dict of [P]/[P,n] arrays."""
+    single = functools.partial(
+        _eval_single, redistribution=redistribution,
+        async_exec=async_exec, energy_mode=energy_mode)
+    return jax.jit(jax.vmap(single, in_axes=(None, 0, 0, 0, 0)))
+
+
+@functools.lru_cache(maxsize=None)
+def grid_fn(redistribution: bool, async_exec: bool, energy_mode: str):
+    """Grid×population form for the sweep engine: consts stacked on a
+    leading grid axis, genomes shaped [G,P,...]; one compiled call per
+    shape signature covers the whole grid group."""
+    single = functools.partial(
+        _eval_single, redistribution=redistribution,
+        async_exec=async_exec, energy_mode=energy_mode)
+    over_pop = jax.vmap(single, in_axes=(None, 0, 0, 0, 0))
+    over_grid = jax.vmap(over_pop, in_axes=(0, 0, 0, 0, 0))
+    return jax.jit(over_grid)
+
+
+def _run_x64(fn, consts: EvalConsts, Px, Py, collectors, redist
+             ) -> dict[str, np.ndarray]:
+    """Shared call wrapper: float64 conversion inside the x64 scope,
+    numpy float64 outputs with the numpy backend's keys/shapes."""
+    with jax.experimental.enable_x64():
+        cj = {k: jnp.asarray(v) for k, v in consts.items()}
+        out = fn(cj,
+                 jnp.asarray(Px, dtype=jnp.float64),
+                 jnp.asarray(Py, dtype=jnp.float64),
+                 jnp.asarray(collectors, dtype=jnp.float64),
+                 jnp.asarray(redist, dtype=jnp.float64))
+        return {k: np.asarray(v) for k, v in out.items()}
+
+
+def batch_evaluate(consts: EvalConsts, opts: EvalOptions,
+                   Px, Py, collectors, redist) -> dict[str, np.ndarray]:
+    """Population-batched evaluation (genomes [P,...]) — the GA path."""
+    return _run_x64(population_fn(*_static_key(opts)),
+                    consts, Px, Py, collectors, redist)
+
+
+def grid_evaluate(consts_stack: EvalConsts, opts: EvalOptions,
+                  Px, Py, collectors, redist) -> dict[str, np.ndarray]:
+    """Grid-batched evaluation: every array carries a leading grid axis
+    (consts [G,...], genomes [G,P,...]); used by :mod:`repro.core.sweep`."""
+    return _run_x64(grid_fn(*_static_key(opts)),
+                    consts_stack, Px, Py, collectors, redist)

@@ -46,6 +46,9 @@ class GAConfig:
     seed: int = 0
     freeze_redist: bool = False  # force redistribution on all valid pairs
                                  # (TPU bridge: no shared-memory path exists)
+    backend: str = "numpy"       # fitness backend: "numpy" | "jax"
+                                 # (jit+vmap path, DESIGN.md §8; identical
+                                 # trajectories under a fixed seed)
 
 
 @dataclasses.dataclass
@@ -108,10 +111,11 @@ def run_ga(
     objective: str = "latency",
     options: EvalOptions | None = None,
     cfg: GAConfig = GAConfig(),
+    backend: str | None = None,
 ) -> GAResult:
     if options is None:
         options = EvalOptions(redistribution=True, async_exec=True)
-    ev = Evaluator(task, hw, options)
+    ev = Evaluator(task, hw, options, backend=backend or cfg.backend)
     rng = np.random.default_rng(cfg.seed)
     n = len(task)
     X, Y = hw.X, hw.Y

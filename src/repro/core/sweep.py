@@ -1,0 +1,248 @@
+"""Batched design-space sweep engine (DESIGN.md §9).
+
+Design-space exploration hammers the analytical evaluator across
+(HWConfig × Task × EvalOptions) grids — Figs. 8–13 alone cover four
+packaging types × four workloads × three solvers × multiple grid sizes.
+This module turns those hand-rolled Python loops into:
+
+  * :func:`grid` — generic named-axis cartesian product (any axes, not
+    just eval triples; ``benchmarks/fig3_motivation.py`` sweeps the
+    netsim with it too);
+  * :func:`run_grid` — the timed per-point driver for solver sweeps
+    (GA / MIQP calls that cannot be batched across points);
+  * :class:`EvalPoint` / :func:`eval_sweep` — *batched* evaluation: all
+    points whose shape signature (n_ops, X, Y, n_entrances) and static
+    options match are stacked along a grid axis and evaluated by ONE
+    ``jax.jit`` call (``evaluator_jax.grid_fn`` = jit(vmap(vmap))); the
+    numpy backend loops per point and is the parity reference;
+  * a process-wide result cache keyed by content fingerprints
+    (backend + task ops + HWConfig + options + partition bytes), so
+    repeated baselines across figure scripts — e.g. ``run.py`` invoking
+    fig8 then fig9 on the same workloads — are evaluated once per
+    backend (backends agree only to rtol 1e-9, so records are not
+    shared across them — results must not depend on evaluation order).
+
+Typical use (LS baselines for one figure)::
+
+    points = [EvalPoint(task, hw) for hw in hws for task in tasks]
+    recs = eval_sweep(points)                  # one compiled call
+    recs[0]["latency"], recs[0]["edp"]
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Iterable, Sequence
+
+import numpy as np
+
+from .evaluator import EvalOptions, Evaluator
+from .hw import HWConfig
+from .workload import Partition, Task, uniform_partition
+
+__all__ = [
+    "EvalPoint",
+    "eval_sweep",
+    "grid",
+    "run_grid",
+    "clear_cache",
+    "cache_stats",
+]
+
+
+# --------------------------------------------------------------- generic grid
+def grid(**axes: Iterable) -> list[dict[str, Any]]:
+    """Named-axis cartesian product: ``grid(a=[1,2], b="xy")`` →
+    ``[{"a":1,"b":"x"}, {"a":1,"b":"y"}, ...]``. Axis order follows the
+    keyword order, last axis fastest (matches nested-loop reading)."""
+    names = list(axes)
+    values = [list(axes[n]) for n in names]
+    return [dict(zip(names, combo)) for combo in itertools.product(*values)]
+
+
+def run_grid(
+    points: Sequence[dict[str, Any]],
+    fn: Callable[..., Any],
+    emit: Callable[[dict, Any, float], None] | None = None,
+) -> list[tuple[dict, Any, float]]:
+    """Timed per-point driver for sweeps whose body cannot be batched
+    (GA / MIQP solves, netsim runs). Calls ``fn(**point)`` for every
+    point, returning ``(point, result, microseconds)`` triples; ``emit``
+    (if given) is invoked per point for CSV-style reporting."""
+    out = []
+    for pt in points:
+        t0 = time.perf_counter()
+        res = fn(**pt)
+        us = (time.perf_counter() - t0) * 1e6
+        out.append((pt, res, us))
+        if emit is not None:
+            emit(pt, res, us)
+    return out
+
+
+# ----------------------------------------------------------- batched eval
+@dataclasses.dataclass
+class EvalPoint:
+    """One grid point of the batched evaluator sweep.
+
+    ``partition=None`` means the LS-uniform partition (the baseline of
+    every figure); ``redist_mask=None`` follows ``Evaluator.evaluate``:
+    redistribute on every chained pair iff ``options.redistribution``.
+    """
+
+    task: Task
+    hw: HWConfig
+    options: EvalOptions = EvalOptions()
+    partition: Partition | None = None
+    redist_mask: np.ndarray | None = None
+
+    def resolved_partition(self) -> Partition:
+        if self.partition is not None:
+            return self.partition
+        return uniform_partition(self.task, self.hw.X, self.hw.Y)
+
+
+def _task_fingerprint(task: Task) -> tuple:
+    return (task.name, tuple(task.ops))
+
+
+def _point_fingerprint(pt: EvalPoint, backend: str) -> tuple:
+    part = pt.resolved_partition()
+    rd = (None if pt.redist_mask is None
+          else np.asarray(pt.redist_mask, dtype=bool).tobytes())
+    # backend is part of the key: the two engines agree only to rtol
+    # 1e-9 (not bitwise), so sharing records across backends would make
+    # results depend on which backend touched a fingerprint first.
+    return (
+        backend,
+        _task_fingerprint(pt.task),
+        pt.hw,
+        pt.options,
+        part.Px.tobytes(), part.Py.tobytes(), part.collectors.tobytes(),
+        rd,
+    )
+
+
+_CACHE: dict[tuple, dict[str, Any]] = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def _copy_record(rec: dict[str, Any]) -> dict[str, Any]:
+    """Records cross the cache boundary by value — callers mutating a
+    returned record (or its arrays) must not poison the process cache."""
+    return {k: (v.copy() if isinstance(v, np.ndarray) else v)
+            for k, v in rec.items()}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0
+
+
+def cache_stats() -> dict[str, int]:
+    return dict(_STATS)
+
+
+def _record(point: EvalPoint, out: dict[str, np.ndarray], i: int | tuple
+            ) -> dict[str, Any]:
+    """Extract one point's scalars/arrays from a batched output dict."""
+    def at(v):
+        return v[i]
+
+    rec = {
+        "task": point.task.name,
+        "hw": point.hw,
+        "options": point.options,
+        "latency": float(at(out["latency"])),
+        "energy": float(at(out["energy"])),
+        "edp": float(at(out["edp"])),
+        "t_in": np.asarray(at(out["t_in"])),
+        "t_comp": np.asarray(at(out["t_comp"])),
+        "t_out": np.asarray(at(out["t_out"])),
+    }
+    for k in ("E_sram", "E_mac", "E_mem", "E_nop"):
+        rec[k] = float(at(out[k]))
+    return rec
+
+
+def _genome(pt: EvalPoint, ev: Evaluator):
+    part = pt.resolved_partition()
+    if pt.redist_mask is None:
+        rd = ev.chain_valid & pt.options.redistribution
+    else:
+        rd = np.asarray(pt.redist_mask, dtype=bool) & ev.chain_valid
+        if not pt.options.redistribution:
+            rd = np.zeros_like(rd)
+    return (part.Px.astype(np.float64), part.Py.astype(np.float64),
+            part.collectors.astype(np.float64), rd.astype(np.float64))
+
+
+def eval_sweep(
+    points: Sequence[EvalPoint],
+    backend: str = "jax",
+    cache: bool = True,
+) -> list[dict[str, Any]]:
+    """Evaluate every point; returns records aligned with ``points``.
+
+    JAX backend: uncached points are grouped by shape signature + static
+    options and each group is evaluated in one compiled call (consts and
+    genomes stacked on a leading grid axis). Numpy backend: per-point
+    reference loop — same records, used by the parity tests.
+    """
+    records: list[dict[str, Any] | None] = [None] * len(points)
+    todo: list[int] = []
+    fps: list[tuple | None] = [None] * len(points)
+    for i, pt in enumerate(points):
+        if cache:
+            fp = _point_fingerprint(pt, backend)
+            fps[i] = fp
+            hit = _CACHE.get(fp)
+            if hit is not None:
+                _STATS["hits"] += 1
+                records[i] = _copy_record(hit)
+                continue
+            _STATS["misses"] += 1
+        todo.append(i)
+
+    if todo and backend == "numpy":
+        for i in todo:
+            pt = points[i]
+            ev = Evaluator(pt.task, pt.hw, pt.options, backend="numpy")
+            Px, Py, co, rd = _genome(pt, ev)
+            out = ev.evaluate_batch(Px[None], Py[None], co[None], rd[None])
+            records[i] = _record(pt, out, 0)
+    elif todo:
+        from . import evaluator_jax
+
+        # Group by (shape signature, static options): one compiled+batched
+        # call per group.
+        groups: dict[tuple, list[int]] = {}
+        evs: dict[int, Evaluator] = {}
+        for i in todo:
+            pt = points[i]
+            ev = Evaluator(pt.task, pt.hw, pt.options, backend="jax")
+            evs[i] = ev
+            sig = (len(pt.task), pt.hw.X, pt.hw.Y, ev.top.n_entrances,
+                   pt.options.redistribution, pt.options.async_exec,
+                   pt.options.energy_mode)
+            groups.setdefault(sig, []).append(i)
+
+        for sig, idxs in groups.items():
+            consts = [evs[i].consts() for i in idxs]
+            stacked = {k: np.stack([c[k] for c in consts])
+                       for k in consts[0]}
+            genomes = [_genome(points[i], evs[i]) for i in idxs]
+            Px = np.stack([g[0] for g in genomes])[:, None]   # [G,1,n,X]
+            Py = np.stack([g[1] for g in genomes])[:, None]
+            co = np.stack([g[2] for g in genomes])[:, None]
+            rd = np.stack([g[3] for g in genomes])[:, None]
+            out = evaluator_jax.grid_evaluate(
+                stacked, points[idxs[0]].options, Px, Py, co, rd)
+            for g, i in enumerate(idxs):
+                records[i] = _record(points[i], out, (g, 0))
+
+    if cache:
+        for i in todo:
+            _CACHE[fps[i]] = _copy_record(records[i])
+    return records  # type: ignore[return-value]

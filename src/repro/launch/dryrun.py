@@ -49,6 +49,15 @@ _BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "s64": 8,
           "u32": 4, "s8": 1, "u8": 1, "pred": 1, "s16": 2, "u16": 2}
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` across jax versions: jax<=0.4.x
+    returns a one-element list of dicts, jax>=0.5 returns the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
+
+
 def collective_bytes(hlo_text: str) -> dict[str, float]:
     """Sum per-device output bytes of every collective op in the
     post-SPMD HLO module."""
@@ -195,7 +204,7 @@ def run_cell(arch: str, shape: str, mesh_name: str, mesh,
     compiled = lowered.compile()
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     rec = {
         "arch": arch,
@@ -282,7 +291,7 @@ def calibrate_cell(arch: str, shape: str, mesh, *, extra_rules=None,
                         shard_residual=shard_residual,
                         serve_fsdp=serve_fsdp)
                 compiled = lowered.compile()
-                cost = compiled.cost_analysis()
+                cost = cost_analysis_dict(compiled)
                 out[ai, li] = {
                     "flops": float(cost.get("flops", 0.0)),
                     "bytes": float(cost.get("bytes accessed", 0.0)),

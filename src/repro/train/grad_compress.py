@@ -44,7 +44,8 @@ def compressed_psum_mean(x, err, axis_names: tuple[str, ...]):
     summed = jax.lax.psum(deq, axis_names)
     n = 1
     for a in axis_names:
-        n *= jax.lax.axis_size(a)
+        # psum(1) == axis size; jax.lax.axis_size only exists in jax>=0.5
+        n *= jax.lax.psum(1, a)
     return summed / n, new_err
 
 

@@ -1,0 +1,40 @@
+"""Optional-`hypothesis` shim for property-based tests.
+
+``hypothesis`` is a dev-only dependency (requirements-dev.txt). When it is
+absent, the property-based tests are skipped instead of breaking collection
+of the whole module: ``given`` becomes a skip-marking decorator, ``settings``
+a no-op, and ``st`` a stub whose strategy constructors return ``None`` so
+module-level strategy expressions still evaluate.
+
+Usage (instead of ``from hypothesis import ...``)::
+
+    from _hypothesis_compat import given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis absent
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_kw):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _St:
+        """Stand-in for ``hypothesis.strategies``: any attribute is a
+        callable returning ``None`` (never executed — tests are skipped)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _St()
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

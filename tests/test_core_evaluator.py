@@ -1,7 +1,8 @@
 """End-to-end evaluator invariants (paper Sec. 4.2.4–4.4, 5.1–5.3)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (EvalOptions, Evaluator, GemmOp, Task, make_hw,
                         uniform_partition)

@@ -1,7 +1,7 @@
 """Topology / hop-formula invariants (paper Sec. 4.1/4.3, 5.1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.hw import HWConfig, MCMType, make_hw
 

@@ -1,0 +1,129 @@
+"""Sweep engine invariants (DESIGN.md §9): grid products, batched
+evaluation parity with the direct evaluator, and result caching."""
+import numpy as np
+import pytest
+
+from repro.core import (EvalOptions, Evaluator, GemmOp, Task, make_hw,
+                        uniform_partition)
+from repro.core import sweep
+from repro.core.api import baseline_result
+
+
+def toy_task(n=3, m=512):
+    ops = [GemmOp("g0", M=m, K=256, N=512)]
+    for i in range(1, n):
+        ops.append(GemmOp(f"g{i}", M=m, K=ops[-1].N, N=512, chained=True))
+    return Task(f"toy{n}_{m}", ops)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    sweep.clear_cache()
+    yield
+    sweep.clear_cache()
+
+
+def test_grid_product_order():
+    g = sweep.grid(a=[1, 2], b="xy")
+    assert g == [{"a": 1, "b": "x"}, {"a": 1, "b": "y"},
+                 {"a": 2, "b": "x"}, {"a": 2, "b": "y"}]
+    assert sweep.grid() == [{}]
+
+
+def test_run_grid_times_and_emits():
+    seen = []
+    out = sweep.run_grid(
+        sweep.grid(x=[1, 2, 3]),
+        lambda x: x * 10,
+        emit=lambda pt, res, us: seen.append((pt["x"], res)),
+    )
+    assert [r for _, r, _ in out] == [10, 20, 30]
+    assert all(us >= 0 for _, _, us in out)
+    assert seen == [(1, 10), (2, 20), (3, 30)]
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_eval_sweep_matches_direct_eval(backend):
+    tasks = [toy_task(2), toy_task(4)]
+    hws = [make_hw(t, 4, "hbm") for t in "AB"]
+    points = [sweep.EvalPoint(task, hw) for task in tasks for hw in hws]
+    recs = sweep.eval_sweep(points, backend=backend, cache=False)
+    for pt, rec in zip(points, recs):
+        r = Evaluator(pt.task, pt.hw, pt.options).evaluate(
+            uniform_partition(pt.task, pt.hw.X, pt.hw.Y))
+        assert rec["latency"] == pytest.approx(r.latency, rel=1e-9)
+        assert rec["energy"] == pytest.approx(r.energy, rel=1e-9)
+        assert rec["edp"] == pytest.approx(r.edp, rel=1e-9)
+        np.testing.assert_allclose(rec["t_comp"], r.t_comp, rtol=1e-9)
+
+
+def test_eval_sweep_batches_mixed_shapes():
+    """Grid points of different shape signatures (different n_ops and
+    entrance counts) must land in separate compiled groups yet return
+    aligned records."""
+    points = [
+        sweep.EvalPoint(toy_task(2), make_hw("A", 4)),
+        sweep.EvalPoint(toy_task(3), make_hw("A", 4)),
+        sweep.EvalPoint(toy_task(2), make_hw("C", 4)),
+        sweep.EvalPoint(toy_task(2), make_hw("A", 2)),
+    ]
+    recs = sweep.eval_sweep(points, backend="jax", cache=False)
+    assert [r["task"] for r in recs] == [p.task.name for p in points]
+    assert all(r["latency"] > 0 for r in recs)
+
+
+def test_eval_sweep_options_and_partition():
+    task = toy_task(3)
+    hw = make_hw("A", 4)
+    opts = EvalOptions(redistribution=True, async_exec=True)
+    part = uniform_partition(task, 4, 4)
+    part.collectors = np.array([1, 2, 3])
+    rd = np.array([True, True, False])
+    rec = sweep.eval_sweep(
+        [sweep.EvalPoint(task, hw, opts, partition=part, redist_mask=rd)],
+        backend="jax", cache=False)[0]
+    ref = Evaluator(task, hw, opts).evaluate(part, rd)
+    assert rec["latency"] == pytest.approx(ref.latency, rel=1e-9)
+    assert rec["energy"] == pytest.approx(ref.energy, rel=1e-9)
+
+
+def test_cache_hits_and_clear():
+    points = [sweep.EvalPoint(toy_task(2), make_hw("A", 4))]
+    sweep.eval_sweep(points)
+    assert sweep.cache_stats() == {"hits": 0, "misses": 1}
+    r1 = sweep.eval_sweep(points)
+    assert sweep.cache_stats() == {"hits": 1, "misses": 1}
+    # cache key includes options/partition content
+    opts = EvalOptions(redistribution=True)
+    sweep.eval_sweep([sweep.EvalPoint(toy_task(2), make_hw("A", 4), opts)])
+    assert sweep.cache_stats()["misses"] == 2
+    sweep.clear_cache()
+    assert sweep.cache_stats() == {"hits": 0, "misses": 0}
+    assert r1[0]["latency"] > 0
+
+
+def test_cache_is_per_backend():
+    """Backends agree only to rtol 1e-9 (not bitwise), so records are
+    cached per backend — results never depend on evaluation order."""
+    points = [sweep.EvalPoint(toy_task(2), make_hw("B", 4))]
+    a = sweep.eval_sweep(points, backend="numpy")[0]
+    b = sweep.eval_sweep(points, backend="jax")[0]  # separate key
+    assert sweep.cache_stats() == {"hits": 0, "misses": 2}
+    sweep.eval_sweep(points, backend="numpy")
+    sweep.eval_sweep(points, backend="jax")
+    assert sweep.cache_stats() == {"hits": 2, "misses": 2}
+    assert a["latency"] == pytest.approx(b["latency"], rel=1e-9)
+
+
+def test_baseline_result_uses_sweep_cache():
+    task = toy_task(3)
+    hw = make_hw("A", 4, "hbm", diagonal_links=True)
+    r1 = baseline_result(task, hw)
+    stats = sweep.cache_stats()
+    r2 = baseline_result(task, hw)
+    assert sweep.cache_stats()["hits"] == stats["hits"] + 1
+    assert r1.latency == r2.latency
+    # diagonal links are stripped for the LS baseline
+    plain = Evaluator(task, hw.replace(diagonal_links=False),
+                      EvalOptions()).evaluate(uniform_partition(task, 4, 4))
+    assert r1.latency == pytest.approx(plain.latency, rel=1e-12)

@@ -106,7 +106,8 @@ def test_reduced_dryrun_compiles(arch):
                 (8, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
         compiled = jax.jit(step, in_shardings=(sh, None)).lower(
             state_abs, batch).compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    from repro.launch.dryrun import cost_analysis_dict
+    assert cost_analysis_dict(compiled).get("flops", 0) > 0
 
 
 def test_collective_bytes_parser():
