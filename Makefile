@@ -2,26 +2,38 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test smoke bench-fast ga-fitness quickstart
+.PHONY: test smoke bench-fast bench-smoke ga-fitness ga-evolve quickstart
 
 # Tier-1 verify — the command CI and the roadmap pin.
 test:
 	$(PY) -m pytest -x -q
 
 # Fast gate: environment sanity (imports, optional-hypothesis shim) +
-# the core evaluator / backend-parity / sweep suites. Catches the class
-# of failure where a missing dev dependency breaks test collection.
+# the core evaluator / backend-parity / sweep / GA-engine suites, then
+# the tiny-profile ga_evolve benchmark as a no-regression smoke check.
+# Catches the class of failure where a missing dev dependency breaks
+# test collection, or an engine change breaks the benchmark driver.
 smoke:
 	$(PY) -m pytest -x -q tests/test_core_evaluator.py \
 	    tests/test_backend_parity.py tests/test_core_sweep.py \
-	    tests/test_core_api.py
+	    tests/test_core_api.py tests/test_core_ga_engines.py
+	$(MAKE) bench-smoke
 
 bench-fast:
 	$(PY) -m benchmarks.run
 
+# Tiny-profile end-to-end GA benchmark (seconds, not minutes) — smoke
+# check that both engines + solve_grid still run and write artifacts.
+bench-smoke:
+	$(PY) -m benchmarks.perf_iterations --cell ga_evolve --smoke
+
 # Backend shootout for the GA fitness hot loop (DESIGN.md §8).
 ga-fitness:
 	$(PY) -m benchmarks.perf_iterations --cell ga_fitness
+
+# End-to-end GA engine shootout — evolution loop included (DESIGN.md §10).
+ga-evolve:
+	$(PY) -m benchmarks.perf_iterations --cell ga_evolve
 
 quickstart:
 	$(PY) examples/quickstart.py

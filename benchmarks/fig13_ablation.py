@@ -6,13 +6,17 @@ collection congestion + flattening memory-latency non-uniformity);
 pipelining adds further latency gains on top.
 
 Grid driving (benchmarks/README.md): LS references come from the batched
-sweep; the (workload × ablation-variant) GA grid runs via
-``sweep.run_grid``; pipelining is layered on the diagonal-link result.
+sweep; the (workload × ablation-variant) GA searches run island-batched
+through ``sweep.solve_grid`` (plain-mesh and diagonal-link variants share
+a shape signature, so both land in one compiled call per workload shape;
+DESIGN.md §10); pipelining is layered on the diagonal-link result.
 """
 from __future__ import annotations
 
+import time
+
 from repro.core import EvalOptions, Evaluator, make_hw, sweep
-from repro.core.ga import GAConfig, run_ga
+from repro.core.ga import GAConfig
 from repro.core.pipelining import pipeline_batch
 from repro.graphs import WORKLOADS
 
@@ -35,23 +39,26 @@ def main(fast: bool = False, backend: str = "jax"):
         backend=backend)
     base = {w: r["latency"] for w, r in zip(wnames, base_recs)}
 
-    # variant axis: partitioning only (plain mesh) vs + diagonal links
+    # variant axis: partitioning only (plain mesh) vs + diagonal links —
+    # same shapes, so the GA searches batch as islands per workload.
+    variants = ("partition_only", "plus_diagonal")
+    pts_grid = sweep.grid(wname=wnames, variant=variants)
+    pts = [sweep.EvalPoint(
+               tasks[p["wname"]],
+               hw_plain if p["variant"] == "partition_only" else hw_diag,
+               opts)
+           for p in pts_grid]
+    t0 = time.perf_counter()
+    recs = sweep.solve_grid(pts, "latency", GA_CFG, backend=backend)
+    us = (time.perf_counter() - t0) * 1e6
+    # one batched solve call for the whole variant grid — the wall time
+    # belongs to the call, not to any single point.
+    emit("fig13/ga/solve_grid_total", us, f"{len(pts)} points")
     ga_out = {}
-
-    def solve(wname, variant):
-        hw = hw_plain if variant == "partition_only" else hw_diag
-        return run_ga(tasks[wname], hw, "latency", opts, GA_CFG,
-                      backend=backend)
-
-    def report(pt, r, us):
-        w, v = pt["wname"], pt["variant"]
+    for p, r in zip(pts_grid, recs):
+        w, v = p["wname"], p["variant"]
         ga_out[(w, v)] = r
-        emit(f"fig13/{w}/{v}", us, f"{base[w] / r.objective:.3f}x")
-
-    sweep.run_grid(
-        sweep.grid(wname=wnames, variant=("partition_only",
-                                          "plus_diagonal")),
-        solve, emit=report)
+        emit(f"fig13/{w}/{v}", 0.0, f"{base[w] / r.objective:.3f}x")
 
     for wname in wnames:
         ga2 = ga_out[(wname, "plus_diagonal")]

@@ -14,21 +14,28 @@ The ``ga_fitness`` cell benchmarks the analytical-evaluator backends
 instead (numpy reference vs jax jit+vmap, DESIGN.md §8) — the hot loop
 of the paper's GA search:
     PYTHONPATH=src python -m benchmarks.perf_iterations --cell ga_fitness
-"""
-import os
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
 
+The ``ga_evolve`` cell benchmarks end-to-end ``run_ga`` wall-clock
+(evolution loop included, not just fitness) across the python and
+device-resident vectorized engines, plus island-batched ``solve_grid``
+vs serial ``run_grid`` on the fig9_10-style GA sweep (DESIGN.md §10):
+    PYTHONPATH=src python -m benchmarks.perf_iterations --cell ga_evolve
+"""
 import argparse
 import json
+import os
+import time
 
-import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.dryrun import calibrate_cell, lower_cell
-from repro.launch.mesh import make_production_mesh
 from repro.roofline.analysis import (HBM_BW, LINK_BW, PEAK_FLOPS,
                                      analytic_hbm_bytes, model_flops_for)
+
+# NOTE: the roofline hillclimb cells need 512 virtual host devices;
+# importing repro.launch.dryrun sets XLA_FLAGS accordingly, so that
+# import happens lazily on the mesh-cell path only. The ga_* cells must
+# run WITHOUT it — carving one CPU into 512 XLA devices starves the
+# intra-op thread pool and distorts evaluator/GA timings several-fold.
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 LOG = os.path.join(ART, "perf_log.json")
@@ -36,6 +43,8 @@ LOG = os.path.join(ART, "perf_log.json")
 
 def measure(arch, shape, mesh, **knobs):
     """Compile + calibrate one variant; return terms + memory."""
+    from repro.launch.dryrun import calibrate_cell, lower_cell
+
     lowered, _ = lower_cell(arch, shape, mesh, **knobs)
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
@@ -88,11 +97,22 @@ def main():
     ap.add_argument("--cell", required=True,
                     help="smollm | internlm2 | deepseek (the three chosen "
                          "hillclimb cells) | ga_fitness (analytical-"
-                         "evaluator backend shootout, DESIGN.md §8)")
+                         "evaluator backend shootout, DESIGN.md §8) | "
+                         "ga_evolve (end-to-end GA engine shootout, "
+                         "DESIGN.md §10)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny populations/generations — the no-regression "
+                         "smoke profile used by `make bench-smoke`")
     args = ap.parse_args()
     if args.cell == "ga_fitness":
         run_ga_fitness()     # no device mesh needed
         return
+    if args.cell == "ga_evolve":
+        run_ga_evolve(smoke=args.smoke)
+        return
+    from repro.launch import dryrun  # noqa: F401 -- sets the 512-device
+    from repro.launch.mesh import make_production_mesh  # XLA_FLAGS first
+
     mesh = make_production_mesh()
     dp = ("data",)
     del dp
@@ -125,9 +145,6 @@ def run_ga_fitness():
     (P ≥ 1024); small populations stay dispatch-bound and numpy remains
     the right default there.
     """
-    import json
-    import time
-
     import numpy as np
 
     from repro.core import EvalOptions, Evaluator, make_hw, \
@@ -177,6 +194,105 @@ def run_ga_fitness():
            "best_speedup": best, "verdict": verdict}
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, "ga_fitness.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def run_ga_evolve(smoke: bool = False):
+    """End-to-end GA engine shootout (DESIGN.md §10).
+
+    Measures whole ``run_ga`` wall-clock — evolution loop included, not
+    just fitness — for the python reference engine vs the device-resident
+    vectorized engine, at search-scale populations; then island-batched
+    ``sweep.solve_grid`` vs a serial ``run_grid`` of the same searches on
+    the fig9_10-style GA sweep. Acceptance bars: ≥5× end-to-end at
+    population ≥256 / 200 generations, ≥2× for island batching. Warm-up
+    runs exclude one-time jit compilation from the timed numbers (the
+    compiled step is process-cached and amortizes across every sweep
+    point of the same shape). ``smoke=True`` shrinks everything to a
+    seconds-long no-regression check (`make bench-smoke`), skips the
+    verdict thresholds, and writes ``ga_evolve_smoke.json`` so it never
+    clobbers the measured acceptance artifact.
+    """
+    from repro.core import EvalOptions, make_hw, sweep
+    from repro.core.ga import GAConfig, run_ga
+    from repro.graphs import WORKLOADS
+
+    hw = make_hw("A", 4, "hbm", diagonal_links=True)
+    opts = EvalOptions(redistribution=True, async_exec=True)
+    if smoke:
+        pops, gens, patience = (16,), 4, 4
+        sweep_wnames = ("alexnet",)
+    else:
+        pops, gens, patience = (64, 256), 200, 200
+        sweep_wnames = ("alexnet", "hydranet")   # fig9_10 --fast profile
+    task = WORKLOADS["alexnet"](batch=1)
+
+    rows = []
+    for pop in pops:
+        cfg = GAConfig(generations=gens, population=pop,
+                       patience=patience, seed=0)
+        secs, objs = {}, {}
+        for name, kw in (("python", dict(engine="python",
+                                         backend="numpy")),
+                         ("vectorized", dict(engine="vectorized",
+                                             backend="jax"))):
+            if name == "vectorized":    # warm the compile cache
+                run_ga(task, hw, "latency", opts, cfg, **kw)
+            t0 = time.perf_counter()
+            r = run_ga(task, hw, "latency", opts, cfg, **kw)
+            secs[name] = time.perf_counter() - t0
+            objs[name] = r.objective
+        sp = secs["python"] / secs["vectorized"]
+        rows.append({"population": pop, "generations": gens,
+                     "python_s": secs["python"],
+                     "vectorized_s": secs["vectorized"], "speedup": sp,
+                     "python_obj": objs["python"],
+                     "vectorized_obj": objs["vectorized"]})
+        print(f"[perf] ga_evolve P={pop} G={gens}: "
+              f"python={secs['python']:.2f}s "
+              f"vectorized={secs['vectorized']:.2f}s speedup={sp:.2f}x")
+
+    # Island batching vs the PR-1 sweep path: the fig9_10 GA sweep
+    # (grid × workload, fig9_10's GA_CFG) driven by device-resident
+    # solve_grid vs the serial run_grid of per-point python-engine
+    # searches that fig9_10 used before (DESIGN.md §10). Timed warm —
+    # the compiled steps are process-cached and reused across the
+    # latency/EDP objectives and by fig13's shared shapes.
+    cfg = GAConfig(generations=gens if smoke else 60, population=64,
+                   patience=patience if smoke else 60, seed=0)
+    grid_gs = (4,) if smoke else (4, 8)
+    pts = [sweep.EvalPoint(
+               WORKLOADS[w](batch=1),
+               make_hw("A", g, "hbm", diagonal_links=True), opts)
+           for g in grid_gs for w in sweep_wnames]
+    sweep.solve_grid(pts, "latency", cfg, cache=False)   # warm compiles
+    t0 = time.perf_counter()
+    sweep.solve_grid(pts, "latency", cfg, cache=False)
+    batched_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep.run_grid(
+        [{"pt": pt} for pt in pts],
+        lambda pt: run_ga(pt.task, pt.hw, "latency", pt.options, cfg,
+                          engine="python", backend="numpy"))
+    serial_s = time.perf_counter() - t0
+    grid_sp = serial_s / batched_s
+    print(f"[perf] ga_evolve solve_grid ({len(pts)} pts): "
+          f"serial-python={serial_s:.2f}s batched={batched_s:.2f}s "
+          f"speedup={grid_sp:.2f}x")
+
+    out = {"rows": rows, "solve_grid": {
+        "points": len(pts), "serial_s": serial_s,
+        "batched_s": batched_s, "speedup": grid_sp}}
+    if not smoke:
+        big = max(r["speedup"] for r in rows if r["population"] >= 256)
+        ok = big >= 5.0 and grid_sp >= 2.0
+        out["verdict"] = ("confirmed (>=5x end-to-end, >=2x islands)"
+                          if ok else "refuted")
+        print(f"[perf] ga_evolve best end-to-end {big:.2f}x, islands "
+              f"{grid_sp:.2f}x -> {out['verdict']}")
+    os.makedirs(ART, exist_ok=True)
+    name = "ga_evolve_smoke.json" if smoke else "ga_evolve.json"
+    with open(os.path.join(ART, name), "w") as f:
         json.dump(out, f, indent=1)
 
 

@@ -37,6 +37,8 @@ def main() -> None:
 
     args.fast = not args.full
     be = args.backend
+    from repro.core import sweep
+
     from . import (fig3_motivation, fig8_latency_hbm, fig9_10_scaling,
                    fig11_pipelining, fig12_lowbw, fig13_ablation, roofline)
 
@@ -51,6 +53,7 @@ def main() -> None:
     }
     only = args.only.split(",") if args.only else list(benches)
     failed = []
+    prev = sweep.cache_stats()
     for name in only:
         print(f"# ===== {name} =====")
         try:
@@ -58,9 +61,18 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failed.append(name)
+        # Per-figure cache effectiveness: hits/misses this figure added
+        # on top of the process-wide sweep cache (eval + solver records).
+        cur = sweep.cache_stats()
+        print(f"# {name}: sweep cache +{cur['hits'] - prev['hits']} hits "
+              f"/ +{cur['misses'] - prev['misses']} misses")
+        prev = cur
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)
+    total = sweep.cache_stats()
+    print(f"# sweep cache totals: {total['hits']} hits / "
+          f"{total['misses']} misses")
     print("# all benchmarks complete")
 
 

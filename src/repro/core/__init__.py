@@ -11,14 +11,19 @@ Layers:
   * :mod:`repro.core.sweep` — batched (HWConfig × Task × EvalOptions)
     design-space sweeps with result caching (DESIGN.md §9).
   * :mod:`repro.core.ga` / :mod:`repro.core.miqp` — the two solvers
-    (Sec. 6.2/6.3); :mod:`repro.core.simba` — the heuristic baseline.
+    (Sec. 6.2/6.3); :mod:`repro.core.ga_jax` — the device-resident GA
+    evolution engine (jit-fused generation step, DESIGN.md §10);
+    :mod:`repro.core.simba` — the heuristic baseline.
   * :mod:`repro.core.pipelining` — RCPSP cross-sample pipelining
     (Sec. 5.4).
   * :mod:`repro.core.netsim` — flow-level NoP simulator (Fig. 3).
   * :mod:`repro.core.api` — one-call front door.
 """
 from .api import ScheduleResult, baseline_result, optimize  # noqa: F401
-from .evaluator import BACKENDS, EvalOptions, EvalResult, Evaluator  # noqa: F401
+from .evaluator import (AUTO_POPULATION_THRESHOLD, BACKENDS,  # noqa: F401
+                        EvalOptions, EvalResult, Evaluator,
+                        resolve_auto_backend)
+from .ga import GAConfig, GAResult, run_ga  # noqa: F401
 from .hw import HWConfig, MCMType, Topology, make_hw  # noqa: F401
-from .sweep import EvalPoint, eval_sweep  # noqa: F401
+from .sweep import EvalPoint, eval_sweep, solve_grid  # noqa: F401
 from .workload import GemmOp, Partition, Task, uniform_partition  # noqa: F401

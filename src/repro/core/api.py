@@ -12,7 +12,8 @@ import time
 
 import numpy as np
 
-from .evaluator import EvalOptions, EvalResult, Evaluator
+from .evaluator import (EvalOptions, EvalResult, Evaluator,
+                        resolve_auto_backend)
 from .ga import GAConfig, run_ga
 from .hw import HWConfig
 from .miqp import MIQPConfig, run_miqp
@@ -151,8 +152,11 @@ def optimize(
     agree to float64 round-off (rtol 1e-9; identical GA trajectories
     under a fixed seed on CPU). ``None`` means numpy, except the ``ga``
     branch which follows ``ga_config.backend`` end-to-end (fitness and
-    scoring always use the same engine)."""
-    scoring_backend = backend or "numpy"
+    scoring always use the same engine). ``"auto"`` resolves by the GA
+    population size (jax at ≥1024, DESIGN.md §8); ``ga_config.engine``
+    additionally selects the evolution loop — ``"vectorized"`` with the
+    jax backend runs the device-resident engine of DESIGN.md §10."""
+    scoring_backend = resolve_auto_backend(backend or "numpy", 1)
     base = baseline_result(task, hw, backend=scoring_backend)
     t0 = time.perf_counter()
     if method == "baseline":
@@ -173,7 +177,8 @@ def optimize(
         cfg = ga_config or GAConfig()
         # Score with the engine the GA fitness actually ran on, so a
         # GAConfig(backend="jax") caller never silently mixes engines.
-        ga_backend = backend or cfg.backend
+        ga_backend = resolve_auto_backend(backend or cfg.backend,
+                                          cfg.population)
         out = run_ga(task, hw1, objective, opts, cfg, backend=ga_backend)
         part, rd = out.partition, out.redist_mask
         res = Evaluator(task, hw1, opts,

@@ -72,7 +72,22 @@ def _ceil_div(a, b):
     return -(-a // b) if isinstance(a, int) else np.ceil(a / b)
 
 
-BACKENDS = ("numpy", "jax")
+BACKENDS = ("numpy", "jax", "auto")
+
+#: ``backend="auto"`` crossover point: the jax jit+vmap path wins above
+#: this population size, numpy below (dispatch overhead dominates small
+#: batches). Measured on this container by
+#: ``benchmarks/perf_iterations --cell ga_fitness`` (DESIGN.md §8);
+#: ``benchmarks/artifacts/ga_fitness.json`` holds the numbers.
+AUTO_POPULATION_THRESHOLD = 1024
+
+
+def resolve_auto_backend(backend: str, population: int) -> str:
+    """Resolve ``"auto"`` to a concrete engine for a given batch size:
+    jax at ``population >= AUTO_POPULATION_THRESHOLD``, numpy below."""
+    if backend == "auto":
+        return "jax" if population >= AUTO_POPULATION_THRESHOLD else "numpy"
+    return backend
 
 
 class Evaluator:
@@ -80,7 +95,9 @@ class Evaluator:
 
     ``backend`` selects the execution engine: ``"numpy"`` (reference) or
     ``"jax"`` (jit+vmap, DESIGN.md §8). Both produce identical result
-    dicts of float64 numpy arrays.
+    dicts of float64 numpy arrays. ``"auto"`` defers the choice to each
+    ``evaluate_batch`` call: jax for populations ≥
+    :data:`AUTO_POPULATION_THRESHOLD`, numpy below.
     """
 
     def __init__(self, task: Task, hw: HWConfig,
@@ -170,7 +187,8 @@ class Evaluator:
         collectors: np.ndarray,  # [P, n] int
         redist: np.ndarray,  # [P, n] float in {0,1}: redistribute after op i
     ) -> dict[str, np.ndarray]:
-        if self.backend == "jax":
+        backend = resolve_auto_backend(self.backend, int(Px.shape[0]))
+        if backend == "jax":
             from . import evaluator_jax
             if self._jax_device_consts is None:
                 self._jax_device_consts = evaluator_jax.to_device(self.consts())

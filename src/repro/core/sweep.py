@@ -9,18 +9,25 @@ This module turns those hand-rolled Python loops into:
     just eval triples; ``benchmarks/fig3_motivation.py`` sweeps the
     netsim with it too);
   * :func:`run_grid` — the timed per-point driver for solver sweeps
-    (GA / MIQP calls that cannot be batched across points);
+    (MIQP / netsim work that cannot be batched across points), with an
+    optional per-point progress line;
   * :class:`EvalPoint` / :func:`eval_sweep` — *batched* evaluation: all
     points whose shape signature (n_ops, X, Y, n_entrances) and static
     options match are stacked along a grid axis and evaluated by ONE
     ``jax.jit`` call (``evaluator_jax.grid_fn`` = jit(vmap(vmap))); the
     numpy backend loops per point and is the parity reference;
+  * :func:`solve_grid` — *batched GA solves* (DESIGN.md §10): same-shape
+    points become islands of one device-resident ``jit(vmap(scan))``
+    evolution call (:mod:`repro.core.ga_jax`); the numpy backend runs the
+    vectorized host engine per point and is the fallback/reference;
   * a process-wide result cache keyed by content fingerprints
-    (backend + task ops + HWConfig + options + partition bytes), so
-    repeated baselines across figure scripts — e.g. ``run.py`` invoking
-    fig8 then fig9 on the same workloads — are evaluated once per
-    backend (backends agree only to rtol 1e-9, so records are not
-    shared across them — results must not depend on evaluation order).
+    (backend + task ops + HWConfig + options + partition bytes for
+    evaluation records; + objective and the full GAConfig for solver
+    records), so repeated baselines across figure scripts — e.g.
+    ``run.py`` invoking fig8 then fig9 on the same workloads — are
+    evaluated once per backend (backends agree only to rtol 1e-9, so
+    records are not shared across them — results must not depend on
+    evaluation order).
 
 Typical use (LS baselines for one figure)::
 
@@ -46,6 +53,7 @@ __all__ = [
     "eval_sweep",
     "grid",
     "run_grid",
+    "solve_grid",
     "clear_cache",
     "cache_stats",
 ]
@@ -65,17 +73,26 @@ def run_grid(
     points: Sequence[dict[str, Any]],
     fn: Callable[..., Any],
     emit: Callable[[dict, Any, float], None] | None = None,
+    progress: bool | str = False,
 ) -> list[tuple[dict, Any, float]]:
     """Timed per-point driver for sweeps whose body cannot be batched
     (GA / MIQP solves, netsim runs). Calls ``fn(**point)`` for every
     point, returning ``(point, result, microseconds)`` triples; ``emit``
-    (if given) is invoked per point for CSV-style reporting."""
+    (if given) is invoked per point for CSV-style reporting.
+
+    ``progress`` prints a ``point i/N`` line with the per-point solve time
+    after each point (pass a string to label the sweep), so long solver
+    grids show liveness without a custom ``emit``."""
+    label = progress if isinstance(progress, str) else "run_grid"
     out = []
-    for pt in points:
+    for i, pt in enumerate(points):
         t0 = time.perf_counter()
         res = fn(**pt)
         us = (time.perf_counter() - t0) * 1e6
         out.append((pt, res, us))
+        if progress:
+            print(f"[sweep] {label} point {i + 1}/{len(points)} "
+                  f"{us:.0f}us")
         if emit is not None:
             emit(pt, res, us)
     return out
@@ -190,6 +207,9 @@ def eval_sweep(
     genomes stacked on a leading grid axis). Numpy backend: per-point
     reference loop — same records, used by the parity tests.
     """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"one of ('numpy', 'jax')")
     records: list[dict[str, Any] | None] = [None] * len(points)
     todo: list[int] = []
     fps: list[tuple | None] = [None] * len(points)
@@ -246,3 +266,109 @@ def eval_sweep(
         for i in todo:
             _CACHE[fps[i]] = _copy_record(records[i])
     return records  # type: ignore[return-value]
+
+
+# ----------------------------------------------------------- batched solves
+def _solver_fingerprint(pt: EvalPoint, backend: str, objective: str,
+                        cfg) -> tuple:
+    """Cache key for a GA solve. The full (frozen, hashable) GAConfig is
+    part of the key — any hyperparameter change is a different record —
+    and so is the backend: the vectorized engines draw from different
+    RNGs, so their results must never be served interchangeably."""
+    return (
+        "ga", backend,
+        _task_fingerprint(pt.task),
+        pt.hw,
+        pt.options,
+        objective,
+        cfg,
+    )
+
+
+def _copy_solver_record(rec):
+    from .ga import GAResult
+
+    return GAResult(
+        partition=rec.partition.copy(),
+        redist_mask=rec.redist_mask.copy(),
+        objective=rec.objective,
+        history=rec.history.copy(),
+        evaluations=rec.evaluations,
+    )
+
+
+def solve_grid(
+    points: Sequence[EvalPoint],
+    objective: str = "latency",
+    cfg=None,
+    backend: str = "jax",
+    cache: bool = True,
+) -> list:
+    """Run one GA search per point; returns ``GAResult`` records aligned
+    with ``points`` (DESIGN.md §10).
+
+    JAX backend: uncached points are grouped by shape signature — (n_ops,
+    X, Y, n_entrances); the :class:`EvalOptions` statics live in the
+    compiled function's cache key — and each group's searches evolve as
+    *islands* of ONE ``jit(vmap(scan))`` call
+    (:func:`repro.core.ga_jax.solve_islands`). Numpy backend: per-point
+    vectorized host engine — the fallback used by ``run.py --backend
+    numpy``. Each island's RNG stream depends only on ``cfg.seed``, so a
+    point's result (and its cache record) is identical whether it is
+    solved alone or batched with others.
+
+    ``pt.partition`` / ``pt.redist_mask`` are ignored — a solve searches
+    the genome space, it does not score a fixed schedule.
+    ``backend="auto"`` resolves by ``cfg.population`` (the DESIGN.md §8
+    threshold) before fingerprinting, so auto-resolved records share the
+    cache with their concrete-backend equivalents."""
+    from .evaluator import resolve_auto_backend
+    from .ga import GAConfig, run_ga
+
+    if cfg is None:
+        cfg = GAConfig()
+    backend = resolve_auto_backend(backend, cfg.population)
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"one of ('numpy', 'jax', 'auto')")
+    records: list = [None] * len(points)
+    todo: list[int] = []
+    fps: list[tuple | None] = [None] * len(points)
+    for i, pt in enumerate(points):
+        if cache:
+            fp = _solver_fingerprint(pt, backend, objective, cfg)
+            fps[i] = fp
+            hit = _CACHE.get(fp)
+            if hit is not None:
+                _STATS["hits"] += 1
+                records[i] = _copy_solver_record(hit)
+                continue
+            _STATS["misses"] += 1
+        todo.append(i)
+
+    if todo and backend == "numpy":
+        for i in todo:
+            pt = points[i]
+            records[i] = run_ga(pt.task, pt.hw, objective, pt.options,
+                                cfg, backend="numpy", engine="vectorized")
+    elif todo:
+        from . import ga_jax
+
+        groups: dict[tuple, list[int]] = {}
+        for i in todo:
+            pt = points[i]
+            sig = (len(pt.task), pt.hw.X, pt.hw.Y,
+                   pt.hw.topology.n_entrances, pt.options)
+            groups.setdefault(sig, []).append(i)
+        for sig, idxs in groups.items():
+            outs = ga_jax.solve_islands(
+                [points[i].task for i in idxs],
+                [points[i].hw for i in idxs],
+                points[idxs[0]].options, objective, cfg)
+            for i, out in zip(idxs, outs):
+                records[i] = out
+
+    if cache:
+        for i in todo:
+            _CACHE[fps[i]] = _copy_solver_record(records[i])
+    return records
