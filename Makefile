@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test smoke bench-fast bench-smoke ga-fitness ga-evolve quickstart
+.PHONY: test smoke bench-fast bench-smoke ga-fitness ga-evolve netsim \
+	quickstart
 
 # Tier-1 verify — the command CI and the roadmap pin.
 test:
@@ -22,10 +23,12 @@ smoke:
 bench-fast:
 	$(PY) -m benchmarks.run
 
-# Tiny-profile end-to-end GA benchmark (seconds, not minutes) — smoke
-# check that both engines + solve_grid still run and write artifacts.
+# Tiny-profile end-to-end benchmarks (seconds, not minutes) — smoke
+# check that the GA engines + solve_grid and the netsim backends still
+# run and write artifacts.
 bench-smoke:
 	$(PY) -m benchmarks.perf_iterations --cell ga_evolve --smoke
+	$(PY) -m benchmarks.perf_iterations --cell netsim --smoke
 
 # Backend shootout for the GA fitness hot loop (DESIGN.md §8).
 ga-fitness:
@@ -34,6 +37,10 @@ ga-fitness:
 # End-to-end GA engine shootout — evolution loop included (DESIGN.md §10).
 ga-evolve:
 	$(PY) -m benchmarks.perf_iterations --cell ga_evolve
+
+# Flow-simulator backend shootout on the Fig. 3 grid (DESIGN.md §11).
+netsim:
+	$(PY) -m benchmarks.perf_iterations --cell netsim
 
 quickstart:
 	$(PY) examples/quickstart.py

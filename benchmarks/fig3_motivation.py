@@ -2,32 +2,42 @@
 4×4 mesh (flow-level simulator standing in for ASTRA-sim).
 
 Grid driving (benchmarks/README.md): the (memory × placement × NoP-BW)
-grid is a generic ``sweep.grid`` product run through ``sweep.run_grid``
-(the netsim is event-driven — no batched-eval path).
+grid is a generic ``sweep.grid`` product whose cells all share the 4×4
+link space, so the whole figure runs through ONE compiled call of the
+batched netsim backend (``sweep.netsim_sweep`` →
+``netsim_jax.simulate_pull_batch``, DESIGN.md §11) with records cached
+process-wide — the same contract as the fig8/fig9 evaluator sweeps.
 """
 from __future__ import annotations
 
+import time
+
 from repro.core import sweep
-from repro.core.netsim import fig3_case
+from repro.core.netsim import fig3_net
 
 from .common import emit, save_json
 
 GB = 1e9
+MESSAGE = 1 * GB
 
 
-def main():
+def main(backend: str = "jax"):
     results = {}
-
-    def report(pt, out, us):
+    cases = sweep.grid(memory=("dram", "hbm"),
+                       placement=("peripheral", "central"),
+                       bw_nop=(60 * GB, 120 * GB))
+    prev = sweep.cache_stats()
+    nets = [fig3_net(p["memory"], p["placement"], p["bw_nop"])
+            for p in cases]
+    t0 = time.perf_counter()
+    recs = sweep.netsim_sweep(nets, MESSAGE, backend=backend)
+    us = (time.perf_counter() - t0) * 1e6
+    emit("fig3/netsim_sweep_total", us,
+         f"{len(cases)} cells, backend={backend}")
+    for pt, rec in zip(cases, recs):
         key = f"{pt['memory']}_{pt['placement']}_nop{int(pt['bw_nop'] / GB)}"
-        results[key] = out["latency"]
-        emit(f"fig3/{key}", us, f"latency_ms={out['latency']*1e3:.2f}")
-
-    sweep.run_grid(
-        sweep.grid(memory=("dram", "hbm"),
-                   placement=("peripheral", "central"),
-                   bw_nop=(60 * GB, 120 * GB)),
-        fig3_case, emit=report)
+        results[key] = rec["latency"]
+        emit(f"fig3/{key}", 0.0, f"latency_ms={rec['latency']*1e3:.2f}")
 
     # headline claims
     nop_scale = results["hbm_peripheral_nop60"] / \
@@ -42,6 +52,9 @@ def main():
          f"{dram_scale:.2f}x (paper: none, 1.00x)")
     emit("fig3/central_vs_peripheral", 0.0,
          f"{placement:.2f}x (paper: 1.53x)")
+    cur = sweep.cache_stats()
+    print(f"# fig3: sweep cache +{cur['hits'] - prev['hits']} hits "
+          f"/ +{cur['misses'] - prev['misses']} misses")
     save_json("fig3", results)
 
 

@@ -13,7 +13,7 @@ solves cannot batch across configs) go through ``sweep.run_grid``.
 """
 from __future__ import annotations
 
-from repro.core import make_hw, optimize, sweep
+from repro.core import EvalOptions, make_hw, optimize, sweep
 from repro.core.ga import GAConfig
 from repro.core.miqp import MIQPConfig
 from repro.graphs import WORKLOADS
@@ -33,16 +33,30 @@ def main(fast: bool = False, backend: str = "jax"):
         workloads = {k: workloads[k] for k in ("alexnet", "hydranet")}
     hws = {t: make_hw(t, 4, "hbm") for t in "ABCD"}
 
-    # LS baselines: one batched + cached sweep over the full grid.
-    base_grid = sweep.grid(t=list(hws), wname=list(workloads))
+    # LS baselines: one batched + cached sweep over the full
+    # (type × workload × congestion-model) grid. The congestion axis
+    # (DESIGN.md §11) scores the same schedules against the flow-level
+    # netsim; the regime records anchor the speedup columns below, the
+    # flow/regime ratio is reported as a model-fidelity diagnostic.
+    base_grid = sweep.grid(t=list(hws), wname=list(workloads),
+                           congestion=("regime", "flow"))
     base_recs = sweep.eval_sweep(
-        [sweep.EvalPoint(workloads[p["wname"]], hws[p["t"]])
+        [sweep.EvalPoint(workloads[p["wname"]], hws[p["t"]],
+                         EvalOptions(congestion=p["congestion"]))
          for p in base_grid],
         backend=backend)
     base = {(p["t"], p["wname"]): r["latency"]
-            for p, r in zip(base_grid, base_recs)}
+            for p, r in zip(base_grid, base_recs)
+            if p["congestion"] == "regime"}
+    flow = {(p["t"], p["wname"]): r["latency"]
+            for p, r in zip(base_grid, base_recs)
+            if p["congestion"] == "flow"}
 
     results = {}
+    for (t, wname), lat in flow.items():
+        ratio = lat / base[(t, wname)]
+        results[f"{t}/{wname}/flow_vs_regime"] = ratio
+        emit(f"fig8/{t}/{wname}/flow_vs_regime", 0.0, f"{ratio:.3f}x")
     speed = {(t, m): [] for t in hws for m in METHOD_KW}
 
     def solve(t, wname, method):

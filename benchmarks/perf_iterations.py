@@ -20,6 +20,11 @@ The ``ga_evolve`` cell benchmarks end-to-end ``run_ga`` wall-clock
 device-resident vectorized engines, plus island-batched ``solve_grid``
 vs serial ``run_grid`` on the fig9_10-style GA sweep (DESIGN.md §10):
     PYTHONPATH=src python -m benchmarks.perf_iterations --cell ga_evolve
+
+The ``netsim`` cell benchmarks the flow-level congestion simulator
+backends on the Fig. 3 grid (event-driven python loop vs vectorized
+numpy vs one batched jitted call, DESIGN.md §11):
+    PYTHONPATH=src python -m benchmarks.perf_iterations --cell netsim
 """
 import argparse
 import json
@@ -99,7 +104,8 @@ def main():
                          "hillclimb cells) | ga_fitness (analytical-"
                          "evaluator backend shootout, DESIGN.md §8) | "
                          "ga_evolve (end-to-end GA engine shootout, "
-                         "DESIGN.md §10)")
+                         "DESIGN.md §10) | netsim (flow-simulator "
+                         "backend shootout, DESIGN.md §11)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny populations/generations — the no-regression "
                          "smoke profile used by `make bench-smoke`")
@@ -109,6 +115,9 @@ def main():
         return
     if args.cell == "ga_evolve":
         run_ga_evolve(smoke=args.smoke)
+        return
+    if args.cell == "netsim":
+        run_netsim(smoke=args.smoke)
         return
     from repro.launch import dryrun  # noqa: F401 -- sets the 512-device
     from repro.launch.mesh import make_production_mesh  # XLA_FLAGS first
@@ -294,6 +303,77 @@ def run_ga_evolve(smoke: bool = False):
     name = "ga_evolve_smoke.json" if smoke else "ga_evolve.json"
     with open(os.path.join(ART, name), "w") as f:
         json.dump(out, f, indent=1)
+
+
+def run_netsim(smoke: bool = False):
+    """Flow-simulator backend shootout on the Fig. 3 grid (DESIGN.md §11).
+
+    Times the full (memory × placement × NoP-BW) Fig. 3 congestion study
+    three ways: the event-driven python reference (serial, per cell),
+    the vectorized numpy waterfilling engine (serial, per cell), and the
+    batched jitted engine (ONE ``netsim_jax.simulate_pull_batch`` call
+    for the whole grid — every cell shares the 4×4 link space, so
+    capacities/attachments are data, not structure). Timed warm: the
+    compiled call is process-cached and amortizes across every grid of
+    the same shape. Acceptance bar: ≥5× event-driven → batched-jax on
+    the full grid. ``smoke=True`` shrinks the bandwidth axis to a
+    seconds-long no-regression check (`make bench-smoke`), skips the
+    verdict, and writes ``netsim_smoke.json``.
+    """
+    import numpy as np
+
+    from repro.core import netsim, netsim_jax
+
+    GB = 1e9
+    bws = (60, 120) if smoke else (15, 30, 60, 90, 120, 180, 240, 480)
+    cells = [(m, p, bw * GB)
+             for m in ("dram", "hbm") for p in ("peripheral", "central")
+             for bw in bws]
+    nets = [netsim.fig3_net(m, p, bw) for m, p, bw in cells]
+    msg = 1 * GB
+
+    t0 = time.perf_counter()
+    lat_event = [netsim.simulate_pull(n, msg, engine="event")["latency"]
+                 for n in nets]
+    event_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    lat_vec = [netsim.simulate_pull(n, msg, engine="vectorized")["latency"]
+               for n in nets]
+    vec_s = time.perf_counter() - t0
+
+    caps = np.stack([n.link_caps() for n in nets])
+    incs = np.stack([n.pull_incidence() for n in nets])
+    msgs = np.full((len(nets), nets[0].graph.n_nodes), float(msg))
+    netsim_jax.simulate_pull_batch(caps, incs, msgs)     # warm / compile
+    t0 = time.perf_counter()
+    out = netsim_jax.simulate_pull_batch(caps, incs, msgs)
+    jax_s = time.perf_counter() - t0
+
+    # Three-way parity against the event reference — a drifting engine
+    # must not report a clean verdict.
+    err = max(abs(a - b) / a for a, b in zip(lat_event, out["latency"]))
+    err_vec = max(abs(a - b) / a for a, b in zip(lat_event, lat_vec))
+    sp_jax = event_s / jax_s
+    sp_vec = event_s / vec_s
+    print(f"[perf] netsim grid={len(cells)} cells: "
+          f"event={event_s*1e3:.1f}ms vectorized={vec_s*1e3:.1f}ms "
+          f"batched-jax={jax_s*1e3:.1f}ms | speedup vec={sp_vec:.2f}x "
+          f"jax={sp_jax:.2f}x | max rel err "
+          f"{max(err, err_vec):.1e}")
+    res = {"cells": len(cells), "event_s": event_s, "vectorized_s": vec_s,
+           "batched_jax_s": jax_s, "speedup_vectorized": sp_vec,
+           "speedup_batched_jax": sp_jax, "max_rel_err": err,
+           "max_rel_err_vectorized": err_vec}
+    if not smoke:
+        res["verdict"] = ("confirmed (>=5x batched)" if sp_jax >= 5.0
+                          else "refuted (<5x)")
+        print(f"[perf] netsim batched speedup {sp_jax:.2f}x -> "
+              f"{res['verdict']}")
+    os.makedirs(ART, exist_ok=True)
+    name = "netsim_smoke.json" if smoke else "netsim.json"
+    with open(os.path.join(ART, name), "w") as f:
+        json.dump(res, f, indent=1)
 
 
 def run_smollm(mesh):

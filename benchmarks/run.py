@@ -29,10 +29,10 @@ def main() -> None:
                     help="comma-separated subset (fig3,fig8,fig9_10,"
                          "fig11,fig12,fig13,roofline)")
     ap.add_argument("--backend", default="jax", choices=("numpy", "jax"),
-                    help="evaluator backend for baselines + GA fitness "
-                         "(DESIGN.md §8); backends agree to float64 "
-                         "round-off (rtol 1e-9), jax is faster on large "
-                         "sweeps")
+                    help="execution backend for baselines + GA fitness "
+                         "+ the fig3 netsim sweep (DESIGN.md §8/§11); "
+                         "backends agree to float64 round-off (rtol "
+                         "1e-9), jax is faster on large sweeps")
     args = ap.parse_args()
 
     args.fast = not args.full
@@ -43,7 +43,7 @@ def main() -> None:
                    fig11_pipelining, fig12_lowbw, fig13_ablation, roofline)
 
     benches = {
-        "fig3": lambda: fig3_motivation.main(),
+        "fig3": lambda: fig3_motivation.main(backend=be),
         "fig8": lambda: fig8_latency_hbm.main(fast=args.fast, backend=be),
         "fig9_10": lambda: fig9_10_scaling.main(fast=args.fast, backend=be),
         "fig11": lambda: fig11_pipelining.main(fast=args.fast, backend=be),

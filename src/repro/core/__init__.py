@@ -16,13 +16,18 @@ Layers:
     :mod:`repro.core.simba` — the heuristic baseline.
   * :mod:`repro.core.pipelining` — RCPSP cross-sample pipelining
     (Sec. 5.4).
-  * :mod:`repro.core.netsim` — flow-level NoP simulator (Fig. 3).
+  * :mod:`repro.core.topology` — shared mesh geometry: link enumeration,
+    XY/diagonal routing, entrance masks, hop matrices (DESIGN.md §11).
+  * :mod:`repro.core.netsim` — flow-level NoP simulator (Fig. 3):
+    vectorized max-min waterfilling engine + event-driven reference;
+    :mod:`repro.core.netsim_jax` — the jitted batched port, also traced
+    by the evaluator's ``congestion="flow"`` mode.
   * :mod:`repro.core.api` — one-call front door.
 """
 from .api import ScheduleResult, baseline_result, optimize  # noqa: F401
 from .evaluator import (AUTO_POPULATION_THRESHOLD, BACKENDS,  # noqa: F401
-                        EvalOptions, EvalResult, Evaluator,
-                        resolve_auto_backend)
+                        CONGESTION_MODES, EvalOptions, EvalResult,
+                        Evaluator, resolve_auto_backend)
 from .ga import GAConfig, GAResult, run_ga  # noqa: F401
 from .hw import HWConfig, MCMType, Topology, make_hw  # noqa: F401
 from .sweep import EvalPoint, eval_sweep, solve_grid  # noqa: F401

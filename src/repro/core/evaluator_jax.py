@@ -19,9 +19,12 @@ Structure:
     path) and the scope keeps x64 from leaking into the rest of the
     repo's float32 jax code.
 
-Only the modeling toggles (:class:`EvalOptions` fields) are static: they
-select code paths, so each of the 2×2×2 combinations compiles once per
-shape signature and is cached in ``_POPULATION_FNS`` / ``_GRID_FNS``.
+Only the modeling toggles (:class:`EvalOptions` fields — redistribution,
+async_exec, energy_mode, congestion) are static: they select code paths,
+so each combination compiles once per shape signature and is cached in
+``population_fn`` / ``grid_fn``. The ``congestion="flow"`` path traces
+the max-min waterfilling netsim (:mod:`repro.core.netsim_jax`) inside
+the same jit, vmapped over the op axis (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -34,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from .evaluator import EvalOptions
+from .netsim_jax import waterfill_times
 
 __all__ = [
     "EvalConsts",
@@ -46,9 +50,10 @@ __all__ = [
 #: dict pytree of per-(Task, HWConfig) constants; see CONST_KEYS.
 EvalConsts = Dict[str, Any]
 
-#: Array-valued keys ([n]: per-op, [X,Y]: per-chiplet, [E...]: per-entrance)
-#: followed by the 0-d scalar keys. Order is the canonical stacking order
-#: used by the sweep engine.
+#: Array-valued keys ([n]: per-op, [X,Y]: per-chiplet, [E...]: per-entrance,
+#: [L]/[XY,L]: link-level flow network, DESIGN.md §11) followed by the 0-d
+#: scalar keys. Order is the canonical stacking order used by the sweep
+#: engine.
 CONST_KEYS = (
     # per-op [n]
     "M", "K", "N", "sync", "w_scale", "epilogue", "chain_valid",
@@ -56,6 +61,8 @@ CONST_KEYS = (
     "hA", "hW", "h_min",
     # per-entrance
     "row_mask", "col_mask", "ent_mask", "ent_pos", "is3d", "links",
+    # link-level flow network (congestion="flow")
+    "flow_cap", "dist_inc", "coll_inc",
     # scalars (0-d)
     "B", "bw_nop", "bw_ent", "freq", "R", "C",
     "e_sram", "e_mem", "e_nop", "e_mac",
@@ -70,7 +77,17 @@ def consts_from_evaluator(ev) -> EvalConsts:
     """
     hw = ev.hw
     f8 = lambda a: np.asarray(a, dtype=np.float64)
+    if ev.opts.congestion == "flow":
+        flow_cap, dist_inc, coll_inc = ev.top.flow_net()
+    else:
+        # Regime mode never reads the flow network; ship 1-element
+        # placeholders instead of the [X·Y, L] incidence matrices —
+        # consts are stacked per sweep point and moved to device, and
+        # XLA's dead-code elimination cannot recover that traffic.
+        flow_cap = dist_inc = coll_inc = np.zeros(1)
     return {
+        "flow_cap": f8(flow_cap),
+        "dist_inc": f8(dist_inc), "coll_inc": f8(coll_inc),
         "M": f8(ev.M), "K": f8(ev.K), "N": f8(ev.N),
         "sync": f8(ev.sync),
         "w_scale": f8(ev.w_scale), "epilogue": f8(ev.epilogue),
@@ -89,7 +106,8 @@ def consts_from_evaluator(ev) -> EvalConsts:
 
 
 def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
-                 redistribution: bool, async_exec: bool, energy_mode: str):
+                 redistribution: bool, async_exec: bool, energy_mode: str,
+                 congestion: str = "regime"):
     """One candidate: Px [n,X], Py [n,Y], collectors [n], redist [n].
 
     Line-for-line port of ``Evaluator.evaluate_batch`` with the population
@@ -126,7 +144,34 @@ def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
     tW_xy = inW[:, None, :] * c["hW"][None]
     nop_in_xy = (keepA[:, None, None] * tA_xy + tW_xy) / bw_nop
     t_nop_in = nop_in_xy.max(axis=(-1, -2))
-    t_in = jnp.maximum(t_off_in, t_nop_in)
+
+    flow_mode = congestion == "flow"
+    if flow_mode:
+        # §11 flow congestion: trace the waterfilling netsim per op
+        # (vmapped over the op axis) against the topology's mesh-only
+        # flow network — simulated per-chiplet NoP arrival times replace
+        # the hop-matrix closed form; off-chip serialization keeps the
+        # exact per-entrance term. Routeless chiplets (on their
+        # entrance / under a 3D stack) are masked to zero bytes.
+        d_routed = (c["dist_inc"].sum(axis=1) > 0).astype(inA.dtype)
+        c_routed = (c["coll_inc"].sum(axis=1) > 0).astype(inA.dtype)
+        demand = (keepA[:, None, None] * inA[:, :, None]
+                  + inW[:, None, :]).reshape(n, X * Y) * d_routed
+
+        def dist_one(b):
+            _, done, _ = waterfill_times(c["flow_cap"], c["dist_inc"], b)
+            return done
+
+        def coll_one(b):
+            t, _, _ = waterfill_times(c["flow_cap"], c["coll_inc"], b)
+            return t
+
+        dist_done = jax.vmap(dist_one)(demand).reshape(n, X, Y)
+        t_coll_flow = jax.vmap(coll_one)(
+            chunk.reshape(n, X * Y) * c_routed)
+        t_in = jnp.maximum(t_off_in, dist_done.max(axis=(-1, -2)))
+    else:
+        t_in = jnp.maximum(t_off_in, t_nop_in)
 
     # -------------------------------------------------- phase 2: compute
     fill = (2.0 * R + C + K - 2.0)[:, None, None]
@@ -147,7 +192,8 @@ def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
         links > 0, nonlocal_out / (links_safe * bw_nop), 0.0
     ).max(axis=-1)
     t_off_out = (out_e / bw_ent).max(axis=-1)
-    t_offload = jnp.maximum(t_collect, t_off_out)
+    t_offload = jnp.maximum(t_coll_flow if flow_mode else t_collect,
+                            t_off_out)
 
     # ----------------------------------- phase 3b: redistribution path
     yidx = jnp.arange(Y)[None, :]
@@ -176,7 +222,7 @@ def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
 
     # ----------------------------------------------------- schedule
     if async_exec:
-        fused_xy = nop_in_xy + t_comp_xy
+        fused_xy = (dist_done if flow_mode else nop_in_xy) + t_comp_xy
         t_fused = jnp.maximum(fused_xy.max(axis=(-1, -2)), t_off_in)
         core = jnp.where(sync > 0, t_in + t_comp, t_fused)
     else:
@@ -232,27 +278,31 @@ def to_device(consts: EvalConsts) -> EvalConsts:
 
 def _static_key(opts: EvalOptions) -> tuple:
     return (bool(opts.redistribution), bool(opts.async_exec),
-            opts.energy_mode)
+            opts.energy_mode, opts.congestion)
 
 
 @functools.lru_cache(maxsize=None)
-def population_fn(redistribution: bool, async_exec: bool, energy_mode: str):
+def population_fn(redistribution: bool, async_exec: bool, energy_mode: str,
+                  congestion: str = "regime"):
     """``jit(vmap(candidate))``: (consts, Px[P,n,X], Py[P,n,Y],
     collectors[P,n], redist[P,n]) → dict of [P]/[P,n] arrays."""
     single = functools.partial(
         _eval_single, redistribution=redistribution,
-        async_exec=async_exec, energy_mode=energy_mode)
+        async_exec=async_exec, energy_mode=energy_mode,
+        congestion=congestion)
     return jax.jit(jax.vmap(single, in_axes=(None, 0, 0, 0, 0)))
 
 
 @functools.lru_cache(maxsize=None)
-def grid_fn(redistribution: bool, async_exec: bool, energy_mode: str):
+def grid_fn(redistribution: bool, async_exec: bool, energy_mode: str,
+            congestion: str = "regime"):
     """Grid×population form for the sweep engine: consts stacked on a
     leading grid axis, genomes shaped [G,P,...]; one compiled call per
     shape signature covers the whole grid group."""
     single = functools.partial(
         _eval_single, redistribution=redistribution,
-        async_exec=async_exec, energy_mode=energy_mode)
+        async_exec=async_exec, energy_mode=energy_mode,
+        congestion=congestion)
     over_pop = jax.vmap(single, in_axes=(None, 0, 0, 0, 0))
     over_grid = jax.vmap(over_pop, in_axes=(0, 0, 0, 0, 0))
     return jax.jit(over_grid)

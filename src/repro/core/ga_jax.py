@@ -100,7 +100,7 @@ def _move_units(u, P_, unit, lo, hi, active):
 @functools.lru_cache(maxsize=None)
 def _chunk_fn(elite: int, tournament: int, freeze_redist: bool,
               objective: str, redistribution: bool, async_exec: bool,
-              energy_mode: str):
+              energy_mode: str, congestion: str = "regime"):
     """One compiled ``vmap(scan(generation-step))`` per static signature.
 
     Call as ``fn(consts, win, hp, carry, keys)`` with consts/win/carry
@@ -110,7 +110,8 @@ def _chunk_fn(elite: int, tournament: int, freeze_redist: bool,
     grid it is solved in)."""
     evalp = jax.vmap(
         functools.partial(_eval_single, redistribution=redistribution,
-                          async_exec=async_exec, energy_mode=energy_mode),
+                          async_exec=async_exec, energy_mode=energy_mode,
+                          congestion=congestion),
         in_axes=(None, 0, 0, 0, 0))
 
     def step(consts, win, hp, carry, key):
@@ -242,7 +243,8 @@ def solve_islands(
     }
     fn = _chunk_fn(elite, int(cfg.tournament), bool(cfg.freeze_redist),
                    objective, bool(options.redistribution),
-                   bool(options.async_exec), options.energy_mode)
+                   bool(options.async_exec), options.energy_mode,
+                   options.congestion)
 
     n = len(tasks[0])
     X, Y = hws[0].X, hws[0].Y

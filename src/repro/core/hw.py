@@ -1,14 +1,18 @@
 """Hardware model for MCM (multi-chip-module) systems — paper Sec. 4.1/4.2.1.
 
 Defines the four packaging types (Fig. 2/4), the Table-2 energy/bandwidth
-constants, and the chiplet-grid topology: per-chiplet local indices (x, y)
-relative to the nearest "global chiplet" (memory entrance), hop-count
-matrices for every communication case in Sec. 4.3 (including the diagonal
-link strategy of Sec. 5.1), and entrance link counts used by the collection
-equation (eq. 8).
+constants, and the chiplet-grid :class:`Topology`: per-chiplet local
+indices (x, y) relative to the nearest "global chiplet" (memory entrance),
+hop-count matrices for every communication case in Sec. 4.3 (including the
+diagonal link strategy of Sec. 5.1), entrance link counts used by the
+collection equation (eq. 8), and the link-level flow network consumed by
+the ``congestion="flow"`` evaluator mode.
 
-Everything here is plain numpy, computed once per (HWConfig) and then
-consumed as constants by the jax-vectorized evaluator.
+All geometry primitives live in :mod:`repro.core.topology` (DESIGN.md
+§11) — this module composes them per :class:`HWConfig` and is the one
+place the rest of the stack reads topology facts from. Everything here is
+plain numpy, computed once per (HWConfig) and then consumed as constants
+by the jax-vectorized evaluator.
 """
 from __future__ import annotations
 
@@ -17,6 +21,8 @@ import enum
 from functools import cached_property
 
 import numpy as np
+
+from . import topology as topo
 
 __all__ = [
     "MCMType",
@@ -104,55 +110,13 @@ class HWConfig:
 
 def _entrances(hw: HWConfig) -> list[tuple[int, int, str]]:
     """Memory entrance chiplets as (gx, gy, kind) with kind in
-    {"corner", "edge", "3d"}."""
-    X, Y = hw.X, hw.Y
-    t = hw.mcm_type
-    if t == MCMType.A:
-        return [(0, 0, "corner")]
-    if t == MCMType.B:
-        # Memory stacks on left and right edges, one per row per side.
-        out = []
-        for gx in range(X):
-            out.append((gx, 0, "edge"))
-            if Y > 1:
-                out.append((gx, Y - 1, "edge"))
-        return out
-    if t == MCMType.C:
-        return [(gx, gy, "3d") for gx in range(X) for gy in range(Y)]
-    if t == MCMType.D:
-        # Type B edges + 3D stacks on the interior quad.
-        out = []
-        for gx in range(X):
-            out.append((gx, 0, "edge"))
-            if Y > 1:
-                out.append((gx, Y - 1, "edge"))
-        x0, x1 = (X - 1) // 2, X // 2
-        y0, y1 = (Y - 1) // 2, Y // 2
-        for gx in {x0, x1}:
-            for gy in {y0, y1}:
-                if 0 < gy < Y - 1 or Y <= 2:
-                    out.append((gx, gy, "3d"))
-        return out
-    raise ValueError(f"unknown MCM type {t}")
+    {"corner", "edge", "3d"} (:func:`repro.core.topology.entrances`)."""
+    return topo.entrances(hw.mcm_type, hw.X, hw.Y)
 
 
-def _n_mesh_links(gx: int, gy: int, X: int, Y: int, diagonal: bool) -> int:
-    """Number of NoP links incident to chiplet (gx, gy) in an X*Y mesh.
-
-    Diagonal links (Sec. 5.1) add one diagonal neighbour toward the grid
-    interior — a corner global chiplet goes from 2 to 3 entrance links,
-    the paper's "50% more bandwidth on the bottleneck communication".
-    """
-    n = 0
-    n += 1 if gx > 0 else 0
-    n += 1 if gx < X - 1 else 0
-    n += 1 if gy > 0 else 0
-    n += 1 if gy < Y - 1 else 0
-    if diagonal:
-        # One diagonal link per chiplet toward the interior diagonal mate.
-        if (gx < X - 1 and gy < Y - 1) or (gx > 0 and gy > 0):
-            n += 1
-    return n
+#: Back-compat alias — the implementation lives in the shared topology
+#: layer (DESIGN.md §11).
+_n_mesh_links = topo.n_mesh_links
 
 
 class Topology:
@@ -171,28 +135,10 @@ class Topology:
         ents = _entrances(hw)
         self.entrances = ents
         self.n_entrances = len(ents)
-        gx = np.arange(X)[:, None] * np.ones((1, Y), dtype=int)
-        gy = np.ones((X, 1), dtype=int) * np.arange(Y)[None, :]
 
-        # Assign each chiplet to its nearest entrance (manhattan), tie-break
-        # by entrance order (deterministic).
-        dists = np.stack(
-            [np.abs(gx - ex) + np.abs(gy - ey) for ex, ey, _ in ents], axis=0
-        )
-        self.entrance_id = np.argmin(dists, axis=0)  # [X, Y]
-        ex = np.array([e[0] for e in ents])
-        ey = np.array([e[1] for e in ents])
-        self.x_local = np.abs(gx - ex[self.entrance_id])  # [X, Y]
-        self.y_local = np.abs(gy - ey[self.entrance_id])
-
-        # Group extents: max local index + 1 within each group.
-        self.Xg = np.ones((X, Y), dtype=int)
-        self.Yg = np.ones((X, Y), dtype=int)
-        for e in range(self.n_entrances):
-            m = self.entrance_id == e
-            if m.any():
-                self.Xg[m] = int(self.x_local[m].max()) + 1
-                self.Yg[m] = int(self.y_local[m].max()) + 1
+        # Nearest-entrance grouping + Sec. 4.2.1 local indices.
+        (self.entrance_id, self.x_local, self.y_local,
+         self.Xg, self.Yg) = topo.assign_entrances(X, Y, ents)
 
         # Entrance link counts (for eq. 8 collection bandwidth). The
         # entrance chiplet's own data never crosses the NoP (it sits on the
@@ -201,14 +147,15 @@ class Topology:
         kinds = [e[2] for e in ents]
         self.entrance_links = np.array(
             [
-                _n_mesh_links(exi, eyi, X, Y, hw.diagonal_links)
+                topo.n_mesh_links(exi, eyi, X, Y, hw.diagonal_links)
                 for (exi, eyi, k) in ents
             ]
         )
-        # One-hot mask of entrance positions per group.
-        self.entrance_pos = np.zeros((self.n_entrances, X, Y), dtype=bool)
-        for i, (exi, eyi, _) in enumerate(ents):
-            self.entrance_pos[i, exi, eyi] = True
+        # Per-entrance masks (one-hot positions, membership, row/column
+        # projections — the evaluator's serialization terms).
+        (self.entrance_member, self.entrance_pos,
+         self.entrance_rows, self.entrance_cols) = topo.entrance_masks(
+            X, Y, ents, self.entrance_id)
         self.entrance_is_3d = np.array([k == "3d" for k in kinds])
         # Per-chiplet: is its entrance a 3D (zero-hop) stack?
         self.is_3d = self.entrance_is_3d[self.entrance_id]
@@ -222,31 +169,16 @@ class Topology:
         )
 
         self._build_hop_matrices()
+        self._flow_net = None
 
     # ----------------------------------------------------------------- hops
     def _build_hop_matrices(self):
         hw = self.hw
-        x, y = self.x_local, self.y_local
-        Xg, Yg = self.Xg, self.Yg
-
-        # Case 1 (low off-chip BW, eq. 10): links are free when data
-        # arrives, minimal path.
-        self.hops_low = x + y
-
-        # Case 2.1 (high BW, shared data): send to target row/col first
-        # (congested first column/row), farthest-first ordering adds the
-        # waiting term. Row-shared (eq. 11): X + y. Col-shared (eq. 12): Y+x.
-        h_row = Xg + y
-        h_col = Yg + x
-        if hw.diagonal_links:
-            # Sec 5.1.1: diagonal alternative — wait (X - x), then
-            # min(x, y) diagonal hops + |x - y| straight hops
-            #   = X - x + max(x, y). The two strategies use disjoint links,
-            # so each chiplet takes the min.
-            h_row = np.minimum(h_row, Xg - x + np.maximum(x, y))
-            h_col = np.minimum(h_col, Yg - y + np.maximum(x, y))
-        self.hops_row_shared = h_row
-        self.hops_col_shared = h_col
+        # eq. 10 (low BW minimal path), eq. 11/12 (high-BW row/col-shared
+        # with farthest-first waiting), Sec. 5.1.1 diagonal alternative.
+        self.hops_low, self.hops_row_shared, self.hops_col_shared = \
+            topo.hop_matrices(self.x_local, self.y_local, self.Xg, self.Yg,
+                              hw.diagonal_links)
 
         # 3D-stacked chiplets read memory directly: zero NoP hops.
         for a in ("hops_low", "hops_row_shared", "hops_col_shared"):
@@ -258,6 +190,48 @@ class Topology:
         # number of NoP links into the entrance chiplet; 3D entrances
         # collect at memory bandwidth directly (no NoP bottleneck).
         self.collect_links = np.maximum(self.entrance_links, 0)
+
+    # ------------------------------------------------------- flow network
+    @property
+    def mesh_graph(self) -> topo.MeshGraph:
+        return topo.MeshGraph(self.hw.X, self.hw.Y)
+
+    def flow_net(self):
+        """Link-level flow network for ``congestion="flow"`` (DESIGN.md
+        §11): ``(link_cap [L], dist_inc [X·Y, L], coll_inc [X·Y, L])``.
+
+        One *mesh-only* flow per chiplet, routed assigned entrance → XY
+        for the distribution phase and the reverse for collection
+        (chiplets use their hop-model entrance, ``entrance_id``, so the
+        flow and regime modes agree on which entrance serves which
+        chiplet). The memory-port columns are zeroed out of the
+        incidence: off-chip serialization stays the exact closed-form
+        per-entrance term — a port is used only by its own group, so
+        waterfilling it adds nothing, and shared row/column stripes are
+        fetched once per group (the paper's multicast accounting), not
+        once per chiplet. Only NoP delivery — which the paper does count
+        per chiplet — is simulated. A chiplet sitting on its entrance
+        (or under a 3D stack) has an empty mesh route: its incidence row
+        is zero and the evaluator masks its simulated demand to zero.
+        """
+        if self._flow_net is None:
+            hw = self.hw
+            g = self.mesh_graph
+            Y = hw.Y
+            attach = [ex * Y + ey for ex, ey, _ in self.entrances]
+            assign = np.array(
+                [attach[e] for e in self.entrance_id.ravel()])
+            dist = g.pull_incidence(attach, assign)
+            coll = g.push_incidence(attach, assign)
+            ports = ~g.mesh_link_mask()
+            dist[:, ports] = 0.0
+            coll[:, ports] = 0.0
+            self._flow_net = (
+                g.link_caps(hw.bw_nop, hw.bw_mem, attach),
+                dist,
+                coll,
+            )
+        return self._flow_net
 
     # ------------------------------------------------------------- helpers
     def describe(self) -> str:

@@ -6,11 +6,14 @@ packaging types × four workloads × three solvers × multiple grid sizes.
 This module turns those hand-rolled Python loops into:
 
   * :func:`grid` — generic named-axis cartesian product (any axes, not
-    just eval triples; ``benchmarks/fig3_motivation.py`` sweeps the
-    netsim with it too);
+    just eval triples; ``benchmarks/fig3_motivation.py`` builds its
+    netsim grid with it too);
   * :func:`run_grid` — the timed per-point driver for solver sweeps
-    (MIQP / netsim work that cannot be batched across points), with an
-    optional per-point progress line;
+    (MIQP work that cannot be batched across points), with an optional
+    per-point progress line;
+  * :func:`netsim_sweep` — *batched* flow simulation (DESIGN.md §11):
+    same-mesh-shape nets run through one compiled
+    ``netsim_jax.simulate_pull_batch`` call, with cached records;
   * :class:`EvalPoint` / :func:`eval_sweep` — *batched* evaluation: all
     points whose shape signature (n_ops, X, Y, n_entrances) and static
     options match are stacked along a grid axis and evaluated by ONE
@@ -54,6 +57,7 @@ __all__ = [
     "grid",
     "run_grid",
     "solve_grid",
+    "netsim_sweep",
     "clear_cache",
     "cache_stats",
 ]
@@ -76,9 +80,9 @@ def run_grid(
     progress: bool | str = False,
 ) -> list[tuple[dict, Any, float]]:
     """Timed per-point driver for sweeps whose body cannot be batched
-    (GA / MIQP solves, netsim runs). Calls ``fn(**point)`` for every
-    point, returning ``(point, result, microseconds)`` triples; ``emit``
-    (if given) is invoked per point for CSV-style reporting.
+    (MIQP solves and other external-solver work). Calls ``fn(**point)``
+    for every point, returning ``(point, result, microseconds)`` triples;
+    ``emit`` (if given) is invoked per point for CSV-style reporting.
 
     ``progress`` prints a ``point i/N`` line with the per-point solve time
     after each point (pass a string to label the sweep), so long solver
@@ -245,7 +249,7 @@ def eval_sweep(
             evs[i] = ev
             sig = (len(pt.task), pt.hw.X, pt.hw.Y, ev.top.n_entrances,
                    pt.options.redistribution, pt.options.async_exec,
-                   pt.options.energy_mode)
+                   pt.options.energy_mode, pt.options.congestion)
             groups.setdefault(sig, []).append(i)
 
         for sig, idxs in groups.items():
@@ -261,6 +265,82 @@ def eval_sweep(
                 stacked, points[idxs[0]].options, Px, Py, co, rd)
             for g, i in enumerate(idxs):
                 records[i] = _record(points[i], out, (g, 0))
+
+    if cache:
+        for i in todo:
+            _CACHE[fps[i]] = _copy_record(records[i])
+    return records  # type: ignore[return-value]
+
+
+# ------------------------------------------------------ batched netsim
+def _netsim_fingerprint(net, message_bytes: float, backend: str) -> tuple:
+    return ("netsim", backend, net.X, net.Y, float(net.bw_nop),
+            float(net.bw_mem), tuple(net.attach), float(message_bytes))
+
+
+def netsim_sweep(
+    nets: Sequence,
+    message_bytes: float,
+    backend: str = "jax",
+    cache: bool = True,
+) -> list[dict[str, Any]]:
+    """Run the all-chiplets-pull flow simulation on every
+    :class:`repro.core.netsim.MeshNet`; returns records aligned with
+    ``nets`` (DESIGN.md §11).
+
+    JAX backend: uncached nets are grouped by mesh shape (the
+    :mod:`repro.core.topology` link space is a pure function of (X, Y) —
+    capacities and attachment sets are data) and each group's whole
+    (memory × placement × bandwidth) grid runs through ONE compiled
+    ``lax.while_loop`` call (:func:`repro.core.netsim_jax.
+    simulate_pull_batch`). Numpy backend: the per-net vectorized host
+    engine — the parity reference. Records carry ``latency`` (seconds),
+    per-flow ``done`` times and per-link ``link_bytes`` over the dense
+    link space, and share the process-wide result cache (fingerprint:
+    backend, mesh shape, bandwidths, attachment set, message size)."""
+    from . import netsim
+
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"one of ('numpy', 'jax')")
+    records: list[dict[str, Any] | None] = [None] * len(nets)
+    todo: list[int] = []
+    fps: list[tuple | None] = [None] * len(nets)
+    for i, net in enumerate(nets):
+        if cache:
+            fp = _netsim_fingerprint(net, message_bytes, backend)
+            fps[i] = fp
+            hit = _CACHE.get(fp)
+            if hit is not None:
+                _STATS["hits"] += 1
+                records[i] = _copy_record(hit)
+                continue
+            _STATS["misses"] += 1
+        todo.append(i)
+
+    if todo and backend == "numpy":
+        for i in todo:
+            net = nets[i]
+            out = netsim.simulate_flows(
+                net.pull_incidence(), net.link_caps(),
+                np.full(net.X * net.Y, float(message_bytes)))
+            records[i] = {"latency": float(out["latency"]),
+                          "done": out["done"], "link_bytes": out["link_bytes"]}
+    elif todo:
+        from . import netsim_jax
+
+        groups: dict[tuple, list[int]] = {}
+        for i in todo:
+            groups.setdefault((nets[i].X, nets[i].Y), []).append(i)
+        for (X, Y), idxs in groups.items():
+            caps = np.stack([nets[i].link_caps() for i in idxs])
+            incs = np.stack([nets[i].pull_incidence() for i in idxs])
+            msgs = np.full((len(idxs), X * Y), float(message_bytes))
+            out = netsim_jax.simulate_pull_batch(caps, incs, msgs)
+            for g, i in enumerate(idxs):
+                records[i] = {"latency": float(out["latency"][g]),
+                              "done": out["done"][g],
+                              "link_bytes": out["link_bytes"][g]}
 
     if cache:
         for i in todo:

@@ -1,0 +1,140 @@
+"""``congestion="flow"`` evaluator mode (DESIGN.md §11): backend parity,
+sweep round-trips, cache keying on the congestion axis, and GA solves
+under simulated contention."""
+import numpy as np
+import pytest
+
+from repro.core import (EvalOptions, Evaluator, GemmOp, Task, make_hw,
+                        sweep, uniform_partition)
+from repro.core.ga import GAConfig
+
+
+def toy_task(n=3):
+    ops = [GemmOp("g0", M=512, K=256, N=512)]
+    for i in range(1, n):
+        ops.append(GemmOp(f"g{i}", M=512, K=ops[-1].N, N=512,
+                          chained=True, sync=(i == 1)))
+    return Task(f"flowtoy{n}", ops)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    sweep.clear_cache()
+    yield
+    sweep.clear_cache()
+
+
+def test_bad_congestion_rejected():
+    with pytest.raises(ValueError):
+        EvalOptions(congestion="astral")
+    with pytest.raises(ValueError):
+        Evaluator(toy_task(), make_hw("A", 4), congestion="astral")
+
+
+def test_ctor_override_merges_into_options():
+    ev = Evaluator(toy_task(), make_hw("A", 4),
+                   EvalOptions(redistribution=True), congestion="flow")
+    assert ev.opts.congestion == "flow"
+    assert ev.opts.redistribution is True
+
+
+@pytest.mark.parametrize("t", list("ABCD"))
+def test_flow_mode_backend_parity(t):
+    """numpy reference vs jax traced netsim, all packaging types."""
+    task = toy_task()
+    hw = make_hw(t, 4, "hbm", diagonal_links=(t == "A"))
+    part = uniform_partition(task, 4, 4)
+    opts = EvalOptions(redistribution=True, async_exec=True,
+                       congestion="flow")
+    rn = Evaluator(task, hw, opts, backend="numpy").evaluate(part)
+    rj = Evaluator(task, hw, opts, backend="jax").evaluate(part)
+    assert rj.latency == pytest.approx(rn.latency, rel=1e-9)
+    assert rj.energy == pytest.approx(rn.energy, rel=1e-9)
+    np.testing.assert_allclose(rj.t_in, rn.t_in, rtol=1e-9)
+    np.testing.assert_allclose(rj.t_out, rn.t_out, rtol=1e-9)
+
+
+def test_flow_mode_batch_parity():
+    task = toy_task(2)
+    hw = make_hw("A", 4, "hbm")
+    opts = EvalOptions(congestion="flow")
+    rng = np.random.default_rng(0)
+    base = uniform_partition(task, 4, 4)
+    P = 4
+    Px = np.repeat(base.Px[None], P, 0).astype(float)
+    Py = np.repeat(base.Py[None], P, 0).astype(float)
+    co = rng.integers(0, 4, (P, 2))
+    rd = np.zeros((P, 2))
+    a = Evaluator(task, hw, opts, backend="numpy").evaluate_batch(
+        Px, Py, co, rd)
+    b = Evaluator(task, hw, opts, backend="jax").evaluate_batch(
+        Px, Py, co, rd)
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=1e-9, err_msg=k)
+
+
+def test_flow_differs_from_regime_and_energy_matches():
+    """The two congestion models must disagree on latency for a congested
+    HBM mesh (else "flow" is a no-op) while agreeing on energy — the
+    byte×hop accounting is congestion-independent."""
+    task = toy_task()
+    hw = make_hw("A", 4, "hbm")
+    part = uniform_partition(task, 4, 4)
+    r = Evaluator(task, hw, congestion="regime").evaluate(part)
+    f = Evaluator(task, hw, congestion="flow").evaluate(part)
+    assert f.latency != pytest.approx(r.latency, rel=1e-6)
+    assert f.energy == pytest.approx(r.energy, rel=1e-12)
+
+
+def test_flow_equals_regime_on_type_c():
+    """Type C stacks memory on every chiplet: no data touches the mesh,
+    so the flow simulation must collapse to the closed-form off-chip
+    terms — flow == regime exactly. Pins the §11 accounting split
+    (per-entrance multicast off-chip term + mesh-only simulated flows);
+    per-chiplet port pulls would break this identity."""
+    task = toy_task()
+    hw = make_hw("C", 4, "hbm")
+    part = uniform_partition(task, 4, 4)
+    for backend in ("numpy", "jax"):
+        r = Evaluator(task, hw, congestion="regime",
+                      backend=backend).evaluate(part)
+        f = Evaluator(task, hw, congestion="flow",
+                      backend=backend).evaluate(part)
+        assert f.latency == pytest.approx(r.latency, rel=1e-12)
+        np.testing.assert_allclose(f.t_in, r.t_in, rtol=1e-12)
+        np.testing.assert_allclose(f.t_out, r.t_out, rtol=1e-12)
+
+
+def test_eval_sweep_congestion_axis_round_trip():
+    """EvalPoints on a congestion axis batch, cache per mode, and match
+    the direct evaluator."""
+    task = toy_task()
+    hw = make_hw("A", 4, "hbm")
+    pts = [sweep.EvalPoint(task, hw, EvalOptions(congestion=c))
+           for c in ("regime", "flow")]
+    recs = sweep.eval_sweep(pts, backend="jax")
+    assert sweep.cache_stats() == {"hits": 0, "misses": 2}
+    for pt, rec in zip(pts, recs):
+        ref = Evaluator(task, hw, pt.options).evaluate(
+            uniform_partition(task, 4, 4))
+        assert rec["latency"] == pytest.approx(ref.latency, rel=1e-9)
+    # repeat hits the cache, keyed on the congestion axis
+    again = sweep.eval_sweep(pts, backend="jax")
+    assert sweep.cache_stats() == {"hits": 2, "misses": 2}
+    assert again[0]["latency"] != again[1]["latency"]
+
+
+def test_solve_grid_under_flow_congestion():
+    """GA searches optimize under simulated contention (tiny budget) and
+    cache under the flow-keyed fingerprint."""
+    task = toy_task(2)
+    opts = EvalOptions(redistribution=True, async_exec=True,
+                       congestion="flow")
+    cfg = GAConfig(generations=2, population=8, patience=2, seed=0)
+    pts = [sweep.EvalPoint(task, make_hw("A", 2, "hbm"), opts)]
+    recs = sweep.solve_grid(pts, "latency", cfg, backend="jax")
+    assert np.isfinite(recs[0].objective) and recs[0].objective > 0
+    assert sweep.cache_stats()["misses"] >= 1
+    again = sweep.solve_grid(pts, "latency", cfg, backend="jax")
+    assert sweep.cache_stats()["hits"] >= 1
+    assert again[0].objective == recs[0].objective

@@ -110,6 +110,26 @@ def test_approx_inverse_trick():
                                                      rel=0.01)
 
 
+def test_approx_inverse_accuracy_window():
+    """The first-order replacement has relative error exactly (x/c)²:
+    1/(c+x) − (c−x)/c² = x²/(c²(c+x)). That pins its usable window —
+    ≤1% inside |x| ≤ 0.1c, quadratic degradation outside — and the
+    bound must hold across coefficient scales (the trick is applied
+    after the paper's constant-scaling trick #1, so c spans decades)."""
+    for c in (0.25, 1.0, 16.0, 1e6):
+        for r in (-0.3, -0.1, -0.01, 0.0, 0.01, 0.1, 0.3):
+            x = r * c
+            exact = 1.0 / (c + x)
+            rel = abs(approx_inverse(c, x) - exact) / exact
+            assert rel == pytest.approx(r * r, abs=1e-12)
+    # inside the window the error is ≤1%; at 3x the window it is ~9x worse
+    assert abs(approx_inverse(10.0, 1.0) - 1 / 11.0) * 11.0 <= 0.01 + 1e-12
+    # vectorized x (the irregular-hardware extension path feeds arrays)
+    xs = np.linspace(-1.0, 1.0, 11)
+    out = approx_inverse(10.0, xs)
+    np.testing.assert_allclose(out, (10.0 - xs) / 100.0, rtol=1e-12)
+
+
 def test_miqp_timeout_fallback():
     """Large instance + tiny budget: MIQP must fall back to a feasible
     (uniform) schedule instead of raising (fleet robustness)."""

@@ -1,0 +1,155 @@
+"""Shared topology layer (DESIGN.md §11): primitives vs the hw.Topology
+facade, mesh-link counting on non-square grids, and route-incidence
+invariants of the flow network."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import topology as topo
+from repro.core.hw import _n_mesh_links, make_hw
+
+
+# ------------------------------------------------------- hw consistency
+@pytest.mark.parametrize("t", ["A", "B", "C", "D"])
+@pytest.mark.parametrize("grid", [2, 4, 5])
+def test_hw_topology_consumes_shared_primitives(t, grid):
+    """hw.Topology must be a thin composition of the topology layer —
+    same entrances, assignment, and hop matrices."""
+    hw = make_hw(t, grid)
+    top = hw.topology
+    ents = topo.entrances(t, grid, grid)
+    assert top.entrances == ents
+    eid, xl, yl, Xg, Yg = topo.assign_entrances(grid, grid, ents)
+    np.testing.assert_array_equal(top.entrance_id, eid)
+    np.testing.assert_array_equal(top.x_local, xl)
+    np.testing.assert_array_equal(top.y_local, yl)
+    ent_mask, ent_pos, rows, cols = topo.entrance_masks(
+        grid, grid, ents, eid)
+    np.testing.assert_array_equal(top.entrance_member, ent_mask)
+    np.testing.assert_array_equal(top.entrance_pos, ent_pos)
+    np.testing.assert_array_equal(top.entrance_rows, rows)
+    np.testing.assert_array_equal(top.entrance_cols, cols)
+
+
+def test_hop_matrices_match_hw_without_3d_masking():
+    """The primitive returns raw eq. 10–12 values; hw zeroes 3D chiplets."""
+    hw = make_hw("A", 5, diagonal_links=True)
+    top = hw.topology
+    low, row, col = topo.hop_matrices(top.x_local, top.y_local,
+                                      top.Xg, top.Yg, True)
+    np.testing.assert_array_equal(top.hops_low, low)       # A has no 3D
+    np.testing.assert_array_equal(top.hops_row_shared, row)
+    np.testing.assert_array_equal(top.hops_col_shared, col)
+
+
+# ------------------------------------------- mesh-link counting (eq. 8)
+@pytest.mark.parametrize("X,Y,gx,gy,plain,diag", [
+    # corners of a non-square 3×5 grid: 2 mesh links, +1 diagonal
+    (3, 5, 0, 0, 2, 3),
+    (3, 5, 2, 4, 2, 3),
+    # edge chiplets: 3 links, +1 diagonal
+    (3, 5, 0, 2, 3, 4),
+    (3, 5, 1, 0, 3, 4),
+    # interior: 4 links, +1 diagonal
+    (3, 5, 1, 2, 4, 5),
+    # degenerate 1×N strip: interior has 2, ends have 1; no diagonals
+    (1, 4, 0, 0, 1, 1),
+    (1, 4, 0, 2, 2, 2),
+    # 1×1: isolated chiplet
+    (1, 1, 0, 0, 0, 0),
+    # 2×2: every chiplet is a corner with an interior diagonal mate
+    (2, 2, 0, 0, 2, 3),
+    (2, 2, 1, 1, 2, 3),
+])
+def test_n_mesh_links_non_square(X, Y, gx, gy, plain, diag):
+    assert _n_mesh_links(gx, gy, X, Y, False) == plain
+    assert _n_mesh_links(gx, gy, X, Y, True) == diag
+    # the shared-layer function is the same object (single source of truth)
+    assert _n_mesh_links is topo.n_mesh_links
+
+
+def test_n_mesh_links_totals_match_enumeration():
+    """Σ per-chiplet incident links = 2 × undirected mesh links (each
+    link touches two chiplets) — on a non-square grid."""
+    X, Y = 3, 5
+    total = sum(_n_mesh_links(gx, gy, X, Y, False)
+                for gx in range(X) for gy in range(Y))
+    n_undirected = X * (Y - 1) + Y * (X - 1)
+    assert total == 2 * n_undirected
+    g = topo.MeshGraph(X, Y)
+    assert g.n_links == 2 * n_undirected + 2 * X * Y
+
+
+# ----------------------------------------------------- route incidence
+def test_xy_route_is_row_first_and_minimal():
+    g = topo.MeshGraph(4, 4)
+    r = g.xy_route(0, 15)          # (0,0) -> (3,3)
+    assert len(r) == 6             # manhattan distance
+    # row-first: the first hops move along the row index
+    assert r[0] == (0, 4) and r[2] == (8, 12)
+    assert r[3] == (12, 13)
+    assert g.xy_route(5, 5) == []
+
+
+def test_pull_routes_start_at_memory_and_are_contiguous():
+    g = topo.MeshGraph(3, 4)
+    attach = [0, 7]
+    for dst in range(g.n_nodes):
+        route = g.pull_route(attach, dst)
+        assert route[0][0] == g.mem and route[0][1] in attach
+        for (a, b), (c, d) in zip(route, route[1:]):
+            assert b == c          # contiguous path
+        assert route[-1][1] == dst
+
+
+def test_incidence_shapes_are_placement_invariant():
+    """The link axis is a pure function of (X, Y) — different attachment
+    sets batch together (the netsim_jax grid contract)."""
+    g = topo.MeshGraph(4, 4)
+    a = g.pull_incidence([0])
+    b = g.pull_incidence([5])
+    c = g.push_incidence([0, 3, 12, 15])
+    assert a.shape == b.shape == c.shape == (16, g.n_links)
+    assert (g.link_caps(60e9, 1024e9, [0]).shape
+            == g.link_caps(60e9, 1024e9, [5, 10]).shape)
+
+
+def test_pull_and_push_incidence_route_lengths():
+    """Pull route length = local hop distance + 1 port link; push is the
+    mirror (same length, reversed directions)."""
+    g = topo.MeshGraph(4, 4)
+    pull = g.pull_incidence([0])
+    push = g.push_incidence([0])
+    for d in range(16):
+        dist = d // 4 + d % 4      # manhattan from corner attach
+        assert pull[d].sum() == dist + 1
+        assert push[d].sum() == dist + 1
+    # pull uses mem->c port direction, push the reverse
+    mesh = g.mesh_link_mask()
+    assert (pull[:, ~mesh].sum(axis=1) == 1).all()
+    assert (push[:, ~mesh].sum(axis=1) == 1).all()
+    assert not (pull[:, ~mesh] * push[:, ~mesh]).any()
+
+
+def test_nearest_attach_tie_break_matches_order():
+    # dst 3 at (0,3) is 3 hops from both attach 0 at (0,0) and attach 15
+    # at (3,3) — the tie goes to whichever comes first in the list.
+    assert topo.nearest_attach([0, 15], 3, 4) == 0
+    assert topo.nearest_attach([15, 0], 3, 4) == 15
+
+
+@settings(max_examples=25, deadline=None)
+@given(X=st.integers(1, 4), Y=st.integers(1, 4), seed=st.integers(0, 99))
+def test_incidence_uses_only_real_links(X, Y, seed):
+    rng = np.random.default_rng(seed)
+    g = topo.MeshGraph(X, Y)
+    k = int(rng.integers(1, X * Y + 1))
+    attach = sorted(rng.choice(X * Y, size=k, replace=False).tolist())
+    inc = g.pull_incidence(attach)
+    mesh = g.mesh_link_mask()
+    port_cols = np.where(~mesh)[0]
+    used_ports = port_cols[inc[:, ~mesh].any(axis=0)]
+    # every used memory port belongs to an attach chiplet, downstream dir
+    for l in used_ports:
+        u, v = g.links[l]
+        assert u == g.mem and v in attach
