@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test smoke bench-fast bench-smoke ga-fitness ga-evolve netsim \
-	quickstart
+	miqp-solve quickstart
 
 # Tier-1 verify — the command CI and the roadmap pin.
 test:
@@ -24,11 +24,12 @@ bench-fast:
 	$(PY) -m benchmarks.run
 
 # Tiny-profile end-to-end benchmarks (seconds, not minutes) — smoke
-# check that the GA engines + solve_grid and the netsim backends still
-# run and write artifacts.
+# check that the GA engines + solve_grid, the netsim backends, and the
+# MIQP engines (milp/lattice parity) still run and write artifacts.
 bench-smoke:
 	$(PY) -m benchmarks.perf_iterations --cell ga_evolve --smoke
 	$(PY) -m benchmarks.perf_iterations --cell netsim --smoke
+	$(PY) -m benchmarks.perf_iterations --cell miqp_solve --smoke
 
 # Backend shootout for the GA fitness hot loop (DESIGN.md §8).
 ga-fitness:
@@ -41,6 +42,10 @@ ga-evolve:
 # Flow-simulator backend shootout on the Fig. 3 grid (DESIGN.md §11).
 netsim:
 	$(PY) -m benchmarks.perf_iterations --cell netsim
+
+# MIQP engine shootout + exact-parity audit (DESIGN.md §12).
+miqp-solve:
+	$(PY) -m benchmarks.perf_iterations --cell miqp_solve
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -7,11 +7,16 @@ optimal within its budget).
 
 Grid driving (benchmarks/README.md): per-workload LS references come
 from one batched sweep (latency + EDP from the same records); the
-(objective × workload × method) solver grid runs via ``sweep.run_grid``.
+(objective × workload) GA grid runs via ``sweep.run_grid``; the MIQP
+grid runs batched lattice solves through
+``sweep.solve_grid(method="miqp")`` (DESIGN.md §12) plus the per-point
+polish and one batched scoring sweep per objective.
 """
 from __future__ import annotations
 
-from repro.core import make_hw, optimize, sweep
+import time
+
+from repro.core import EvalOptions, make_hw, optimize, refine_schedule, sweep
 from repro.core.ga import GAConfig
 from repro.core.miqp import MIQPConfig
 from repro.graphs import WORKLOADS
@@ -20,7 +25,8 @@ from .common import emit, geomean, save_json
 
 GA_CFG = GAConfig(generations=60, population=64)
 MIQP_CFG = MIQPConfig(time_limit=60, edp_sweep=3)
-METHOD_KW = {"ga": {"ga_config": GA_CFG}, "miqp": {"miqp_config": MIQP_CFG}}
+MIQP_OPTS = EvalOptions(redistribution=True, async_exec=True)
+MIQP_SOLVE_OPTS = EvalOptions(redistribution=True, async_exec=False)
 
 
 def main(fast: bool = False, backend: str = "jax"):
@@ -33,27 +39,52 @@ def main(fast: bool = False, backend: str = "jax"):
     ref = dict(zip(wnames, base_recs))
 
     results = {}
-    sp = {(o, m): [] for o in ("latency", "edp") for m in METHOD_KW}
+    sp = {(o, m): [] for o in ("latency", "edp")
+          for m in ("ga", "miqp")}
 
-    def solve(objective, wname, method):
-        return optimize(tasks[wname], hw, method, objective,
-                        backend=backend, **METHOD_KW[method])
+    def solve(objective, wname):
+        return optimize(tasks[wname], hw, "ga", objective,
+                        backend=backend, ga_config=GA_CFG)
 
     def report(pt, r, us):
-        o, wname, m = pt["objective"], pt["wname"], pt["method"]
+        o, wname = pt["objective"], pt["wname"]
         val = r.latency if o == "latency" else r.edp
         s = ref[wname][o] / val
-        sp[(o, m)].append(s)
-        results[f"{o}/{wname}/{m}"] = s
-        emit(f"fig12/{o}/{wname}/{m}", us, f"speedup={s:.3f}x")
+        sp[(o, "ga")].append(s)
+        results[f"{o}/{wname}/ga"] = s
+        emit(f"fig12/{o}/{wname}/ga", us, f"speedup={s:.3f}x")
 
     sweep.run_grid(
-        sweep.grid(objective=("latency", "edp"), wname=wnames,
-                   method=list(METHOD_KW)),
+        sweep.grid(objective=("latency", "edp"), wname=wnames),
         solve, emit=report)
 
+    # MIQP: batched lattice solves + polish + batched scoring
+    # (DESIGN.md §12) — the optimize(method="miqp") pipeline.
+    hw_diag = hw.replace(diagonal_links=True)
     for o in ("latency", "edp"):
-        for m in METHOD_KW:
+        pts = [sweep.EvalPoint(tasks[w], hw_diag, MIQP_SOLVE_OPTS)
+               for w in wnames]
+        t0 = time.perf_counter()
+        mi_recs = sweep.solve_grid(pts, o, MIQP_CFG, backend=backend,
+                                   method="miqp")
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig12/{o}/miqp/solve_grid_total", us, f"{len(pts)} points")
+        polished = [refine_schedule(pt.task, pt.hw, MIQP_OPTS, r.partition,
+                                    r.redist_mask, o, backend=backend)
+                    for pt, r in zip(pts, mi_recs)]
+        score = sweep.eval_sweep(
+            [sweep.EvalPoint(pt.task, pt.hw, MIQP_OPTS, partition=part,
+                             redist_mask=rd)
+             for pt, (part, rd) in zip(pts, polished)],
+            backend=backend)
+        for wname, rec in zip(wnames, score):
+            s = ref[wname][o] / rec[o]
+            sp[(o, "miqp")].append(s)
+            results[f"{o}/{wname}/miqp"] = s
+            emit(f"fig12/{o}/{wname}/miqp", 0.0, f"speedup={s:.3f}x")
+
+    for o in ("latency", "edp"):
+        for m in ("ga", "miqp"):
             emit(f"fig12/{o}/geomean/{m}", 0.0,
                  f"{(geomean(sp[(o, m)]) - 1) * 100:+.1f}% vs LS")
     save_json("fig12", results)

@@ -9,20 +9,26 @@ Grid driving (benchmarks/README.md): LS references come from the batched
 sweep; the (workload × ablation-variant) GA searches run island-batched
 through ``sweep.solve_grid`` (plain-mesh and diagonal-link variants share
 a shape signature, so both land in one compiled call per workload shape;
-DESIGN.md §10); pipelining is layered on the diagonal-link result.
+DESIGN.md §10); the same ablation grid is solved by the batched lattice
+MIQP engine through ``sweep.solve_grid(method="miqp")`` (DESIGN.md §12 —
+the same shape sharing applies); pipelining is layered on the
+diagonal-link GA result.
 """
 from __future__ import annotations
 
 import time
 
-from repro.core import EvalOptions, Evaluator, make_hw, sweep
+from repro.core import EvalOptions, Evaluator, make_hw, refine_schedule, sweep
 from repro.core.ga import GAConfig
+from repro.core.miqp import MIQPConfig
 from repro.core.pipelining import pipeline_batch
 from repro.graphs import WORKLOADS
 
 from .common import emit, save_json
 
 GA_CFG = GAConfig(generations=60, population=64)
+MIQP_CFG = MIQPConfig()        # engine="auto" → batched lattice solves
+MIQP_SOLVE_OPTS = EvalOptions(redistribution=True, async_exec=False)
 
 
 def main(fast: bool = False, backend: str = "jax"):
@@ -60,6 +66,34 @@ def main(fast: bool = False, backend: str = "jax"):
         ga_out[(w, v)] = r
         emit(f"fig13/{w}/{v}", 0.0, f"{base[w] / r.objective:.3f}x")
 
+    # ---- MIQP on the same ablation grid (DESIGN.md §12): batched
+    # lattice solves (plain + diagonal variants share shape signatures,
+    # exactly like the GA islands), then polish + one batched scoring
+    # sweep — the optimize(method="miqp") pipeline.
+    mi_pts = [sweep.EvalPoint(
+                  tasks[p["wname"]],
+                  hw_plain if p["variant"] == "partition_only" else hw_diag,
+                  MIQP_SOLVE_OPTS)
+              for p in pts_grid]
+    t0 = time.perf_counter()
+    mi_recs = sweep.solve_grid(mi_pts, "latency", MIQP_CFG,
+                               backend=backend, method="miqp")
+    us = (time.perf_counter() - t0) * 1e6
+    emit("fig13/miqp/solve_grid_total", us, f"{len(mi_pts)} points")
+    polished = [refine_schedule(pt.task, pt.hw, opts, r.partition,
+                                r.redist_mask, "latency", backend=backend)
+                for pt, r in zip(mi_pts, mi_recs)]
+    mi_score = sweep.eval_sweep(
+        [sweep.EvalPoint(pt.task, pt.hw, opts, partition=part,
+                         redist_mask=rd)
+         for pt, (part, rd) in zip(mi_pts, polished)],
+        backend=backend)
+    mi_out = {}
+    for p, rec in zip(pts_grid, mi_score):
+        w, v = p["wname"], p["variant"]
+        mi_out[(w, v)] = base[w] / rec["latency"]
+        emit(f"fig13/{w}/{v}/miqp", 0.0, f"{mi_out[(w, v)]:.3f}x")
+
     for wname in wnames:
         ga2 = ga_out[(wname, "plus_diagonal")]
         ev = Evaluator(tasks[wname], hw_diag, opts, backend=backend)
@@ -69,7 +103,10 @@ def main(fast: bool = False, backend: str = "jax"):
         diag_sp = base[wname] / ga2.objective
         pipe_sp = base[wname] / (pipe.pipelined / 4)
         results[wname] = {"partition": part_sp, "diag": diag_sp,
-                          "pipe": pipe_sp}
+                          "pipe": pipe_sp,
+                          "miqp_partition": mi_out[(wname,
+                                                    "partition_only")],
+                          "miqp_diag": mi_out[(wname, "plus_diagonal")]}
         emit(f"fig13/{wname}/plus_pipelining", 0.0, f"{pipe_sp:.3f}x")
     save_json("fig13", results)
 

@@ -8,8 +8,11 @@ GA–MIQP gap is smallest on type D (near-uniform memory distance).
 
 Grid driving (benchmarks/README.md): LS baselines for the whole
 (type × workload) grid come from the batched sweep engine — one compiled
-call per shape group, cached process-wide; the solver points (GA/MIQP
-solves cannot batch across configs) go through ``sweep.run_grid``.
+call per shape group, cached process-wide; the solver points go through
+the per-point ``sweep.run_grid``/``optimize`` path — every packaging
+type is its own shape signature here, so there is nothing to batch
+within a (type, workload) cell, though ``optimize(method="miqp")`` now
+solves each point with the lattice engine (DESIGN.md §12).
 """
 from __future__ import annotations
 

@@ -25,6 +25,13 @@ The ``netsim`` cell benchmarks the flow-level congestion simulator
 backends on the Fig. 3 grid (event-driven python loop vs vectorized
 numpy vs one batched jitted call, DESIGN.md §11):
     PYTHONPATH=src python -m benchmarks.perf_iterations --cell netsim
+
+The ``miqp_solve`` cell benchmarks the MIQP solver engines on the
+fig9_10 MIQP grid (serial per-point HiGHS ``run_grid`` vs batched
+lattice ``solve_grid``, DESIGN.md §12) with exact-parity checks —
+lattice optimum ≤ the HiGHS incumbent on every point, including the
+fig13 ablation points:
+    PYTHONPATH=src python -m benchmarks.perf_iterations --cell miqp_solve
 """
 import argparse
 import json
@@ -105,7 +112,9 @@ def main():
                          "evaluator backend shootout, DESIGN.md §8) | "
                          "ga_evolve (end-to-end GA engine shootout, "
                          "DESIGN.md §10) | netsim (flow-simulator "
-                         "backend shootout, DESIGN.md §11)")
+                         "backend shootout, DESIGN.md §11) | miqp_solve "
+                         "(MIQP engine shootout + exact-parity checks, "
+                         "DESIGN.md §12)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny populations/generations — the no-regression "
                          "smoke profile used by `make bench-smoke`")
@@ -118,6 +127,9 @@ def main():
         return
     if args.cell == "netsim":
         run_netsim(smoke=args.smoke)
+        return
+    if args.cell == "miqp_solve":
+        run_miqp_solve(smoke=args.smoke)
         return
     from repro.launch import dryrun  # noqa: F401 -- sets the 512-device
     from repro.launch.mesh import make_production_mesh  # XLA_FLAGS first
@@ -374,6 +386,136 @@ def run_netsim(smoke: bool = False):
     name = "netsim_smoke.json" if smoke else "netsim.json"
     with open(os.path.join(ART, name), "w") as f:
         json.dump(res, f, indent=1)
+
+
+def run_miqp_solve(smoke: bool = False):
+    """MIQP engine shootout (DESIGN.md §12).
+
+    Times the fig9_10 MIQP grid two ways — the serial per-point HiGHS
+    ``run_grid`` path this repo used before (``engine="milp"``, the
+    fig9_10 budget of 60 s / 3 ε-points) and batched lattice solves
+    through ``sweep.solve_grid(method="miqp")`` (one call per objective,
+    timed warm: the compiled scoring chunks are process-cached and
+    amortize across every same-shape sweep) — and runs the exact-parity
+    audit: the lattice objective must be ≤ the HiGHS incumbent on every
+    grid point *and* on every fig13 ablation point (both engines score
+    their solutions with the exact evaluator under identical solve
+    options, so the comparison is apples-to-apples; where HiGHS proves
+    model optimality the gap additionally shows how much the exact
+    evaluator recovers over the padded MILP model). Acceptance bars:
+    ≥5× end-to-end on the grid, parity everywhere. ``smoke=True``
+    shrinks everything to a seconds-long no-regression check
+    (`make bench-smoke`), skips the verdict, and writes
+    ``miqp_solve_smoke.json``."""
+    from repro.core import EvalOptions, make_hw, sweep
+    from repro.core.miqp import MIQPConfig, run_miqp
+    from repro.core.workload import GemmOp, Task
+    from repro.graphs import WORKLOADS
+
+    opts = EvalOptions(redistribution=True, async_exec=False)
+    lat_cfg = MIQPConfig(engine="lattice")
+    if smoke:
+        task = Task("two", [GemmOp("a", M=512, K=256, N=512),
+                            GemmOp("b", M=512, K=512, N=512,
+                                   chained=True)])
+        cells = [("two", task, 4, o) for o in ("latency", "edp")]
+        milp_cfg = MIQPConfig(time_limit=10, edp_sweep=2, engine="milp")
+        fig13_cells = []
+    else:
+        wnames = ("alexnet", "hydranet")      # fig9_10 --fast profile
+        cells = [(w, WORKLOADS[w](batch=1), g, o)
+                 for o in ("latency", "edp") for g in (4, 8)
+                 for w in wnames]
+        milp_cfg = MIQPConfig(time_limit=60, edp_sweep=3, engine="milp")
+        fig13_cells = [(w, WORKLOADS[w](batch=1), diag)
+                       for w in ("alexnet", "vit", "hydranet")
+                       for diag in (False, True)]
+
+    def hw_for(g, diag=True):
+        return make_hw("A", g, "hbm", diagonal_links=diag)
+
+    # -- serial HiGHS leg (the pre-§12 path)
+    t0 = time.perf_counter()
+    milp_res = {}
+    for w, task, g, o in cells:
+        t1 = time.perf_counter()
+        r = run_miqp(task, hw_for(g), o, opts, milp_cfg)
+        us = (time.perf_counter() - t1) * 1e6
+        milp_res[(w, g, o)] = r
+        print(f"[perf] miqp_solve milp {w}/{g}x{g}/{o}: "
+              f"obj={r.objective:.4e} {us/1e6:.1f}s", flush=True)
+    serial_s = time.perf_counter() - t0
+
+    # -- batched lattice leg (timed warm, one solve_grid per objective)
+    def lattice_pass(cache):
+        out = {}
+        for o in ("latency", "edp"):
+            sub = [(w, task, g) for w, task, g, oo in cells if oo == o]
+            if not sub:
+                continue
+            pts = [sweep.EvalPoint(task, hw_for(g), opts)
+                   for _, task, g in sub]
+            recs = sweep.solve_grid(pts, o, lat_cfg, method="miqp",
+                                    cache=cache)
+            for (w, _, g), r in zip(sub, recs):
+                out[(w, g, o)] = r
+        return out
+
+    lattice_pass(cache=False)                 # warm the compile caches
+    t0 = time.perf_counter()
+    lat_res = lattice_pass(cache=False)
+    batched_s = time.perf_counter() - t0
+    speedup = serial_s / batched_s
+
+    rows, parity_ok = [], True
+    for key, m in milp_res.items():
+        r = lat_res[key]
+        leq = r.objective <= m.objective * (1 + 1e-9)
+        parity_ok &= leq
+        rows.append({"workload": key[0], "grid": key[1],
+                     "objective": key[2], "milp_obj": m.objective,
+                     "lattice_obj": r.objective, "lattice_leq": leq,
+                     "milp_proved_optimal": "Optimal" in m.milp_status})
+
+    # -- fig13 ablation-point parity audit (latency, 4x4, both variants)
+    fig13_rows = []
+    for w, task, diag in fig13_cells:
+        hw = hw_for(4, diag)
+        m = run_miqp(task, hw, "latency", opts,
+                     MIQPConfig(time_limit=30, engine="milp"))
+        r = run_miqp(task, hw, "latency", opts, lat_cfg)
+        leq = r.objective <= m.objective * (1 + 1e-9)
+        parity_ok &= leq
+        fig13_rows.append({"workload": w, "diagonal": diag,
+                           "milp_obj": m.objective,
+                           "lattice_obj": r.objective,
+                           "lattice_leq": leq})
+        print(f"[perf] miqp_solve fig13 {w}/diag={diag}: "
+              f"milp={m.objective:.4e} lattice={r.objective:.4e} "
+              f"leq={leq}", flush=True)
+
+    print(f"[perf] miqp_solve grid={len(cells)} points: "
+          f"serial-milp={serial_s:.1f}s batched-lattice={batched_s:.1f}s "
+          f"speedup={speedup:.2f}x parity={'OK' if parity_ok else 'FAIL'}")
+    out = {"points": len(cells), "serial_milp_s": serial_s,
+           "batched_lattice_s": batched_s, "speedup": speedup,
+           "parity_ok": parity_ok, "rows": rows,
+           "fig13_parity": fig13_rows}
+    if not smoke:
+        ok = speedup >= 5.0 and parity_ok
+        out["verdict"] = ("confirmed (>=5x batched, lattice <= milp "
+                          "everywhere)" if ok else "refuted")
+        print(f"[perf] miqp_solve -> {out['verdict']}")
+    os.makedirs(ART, exist_ok=True)
+    name = "miqp_solve_smoke.json" if smoke else "miqp_solve.json"
+    with open(os.path.join(ART, name), "w") as f:
+        json.dump(out, f, indent=1)
+    if not parity_ok:
+        # Parity is a correctness property, not a perf number: a lattice
+        # result worse than the HiGHS incumbent must fail the smoke/CI
+        # gate loudly (the artifact above still records the rows).
+        raise SystemExit("miqp_solve: lattice worse than the HiGHS "
+                         "incumbent on at least one point")
 
 
 def run_smollm(mesh):

@@ -13,7 +13,9 @@ Layers:
   * :mod:`repro.core.ga` / :mod:`repro.core.miqp` — the two solvers
     (Sec. 6.2/6.3); :mod:`repro.core.ga_jax` — the device-resident GA
     evolution engine (jit-fused generation step, DESIGN.md §10);
-    :mod:`repro.core.simba` — the heuristic baseline.
+    :mod:`repro.core.miqp_jax` — the batched lattice-enumeration MIQP
+    engine (exact arg-min over the Sec.-6.2 search lattice,
+    DESIGN.md §12); :mod:`repro.core.simba` — the heuristic baseline.
   * :mod:`repro.core.pipelining` — RCPSP cross-sample pipelining
     (Sec. 5.4).
   * :mod:`repro.core.topology` — shared mesh geometry: link enumeration,
@@ -24,11 +26,14 @@ Layers:
     by the evaluator's ``congestion="flow"`` mode.
   * :mod:`repro.core.api` — one-call front door.
 """
-from .api import ScheduleResult, baseline_result, optimize  # noqa: F401
+from .api import (ScheduleResult, baseline_result, optimize,  # noqa: F401
+                  refine_schedule)
 from .evaluator import (AUTO_POPULATION_THRESHOLD, BACKENDS,  # noqa: F401
                         CONGESTION_MODES, EvalOptions, EvalResult,
                         Evaluator, resolve_auto_backend)
 from .ga import GAConfig, GAResult, run_ga  # noqa: F401
 from .hw import HWConfig, MCMType, Topology, make_hw  # noqa: F401
+from .miqp import (MIQPConfig, MIQPResult, run_miqp,  # noqa: F401
+                   resolve_auto_engine)
 from .sweep import EvalPoint, eval_sweep, solve_grid  # noqa: F401
 from .workload import GemmOp, Partition, Task, uniform_partition  # noqa: F401

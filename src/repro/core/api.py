@@ -22,7 +22,8 @@ from .simba import simba_partition
 from .sweep import EvalPoint, eval_sweep
 from .workload import Partition, Task, uniform_partition
 
-__all__ = ["ScheduleResult", "optimize", "baseline_result", "METHODS"]
+__all__ = ["ScheduleResult", "optimize", "baseline_result",
+           "refine_schedule", "METHODS"]
 
 METHODS = ("baseline", "simba", "ga", "miqp")
 
@@ -115,6 +116,20 @@ def _polish(task: Task, hw: HWConfig, opts: EvalOptions, part: Partition,
     return part, rd
 
 
+def refine_schedule(task: Task, hw: HWConfig, options: EvalOptions,
+                    partition: Partition, redist_mask: np.ndarray,
+                    objective: str = "latency", backend: str = "numpy",
+                    rounds: int = 2) -> tuple[Partition, np.ndarray]:
+    """Public wrapper around the MIQP side-variable polish: exact-
+    evaluator coordinate descent on collector columns, per-pair
+    redistribution bits, and share placement — the variables both MIQP
+    engines fix during the solve (DESIGN.md §6/§12). Batched sweeps use
+    it to reproduce ``optimize(method="miqp")``'s polish step after a
+    ``solve_grid(method="miqp")`` call."""
+    return _polish(task, hw, options, partition, redist_mask, objective,
+                   rounds=rounds, backend=backend)
+
+
 def baseline_result(task: Task, hw: HWConfig,
                     backend: str = "numpy") -> EvalResult:
     """Layer-Sequential baseline: uniform partitioning, no optimizations
@@ -155,7 +170,11 @@ def optimize(
     scoring always use the same engine). ``"auto"`` resolves by the GA
     population size (jax at ≥1024, DESIGN.md §8); ``ga_config.engine``
     additionally selects the evolution loop — ``"vectorized"`` with the
-    jax backend runs the device-resident engine of DESIGN.md §10."""
+    jax backend runs the device-resident engine of DESIGN.md §10.
+    ``miqp_config.engine`` likewise selects the MIQP solver engine
+    (DESIGN.md §12): ``"milp"`` = the HiGHS program, ``"lattice"`` (the
+    ``"auto"`` default) = batched exact enumeration of the Sec.-6.2
+    search lattice, scored by the chosen evaluator backend."""
     scoring_backend = resolve_auto_backend(backend or "numpy", 1)
     base = baseline_result(task, hw, backend=scoring_backend)
     t0 = time.perf_counter()
@@ -188,12 +207,18 @@ def optimize(
         # sync per comm/comp pair), then score the resulting partition under
         # the full runtime (same options as GA) and polish the discrete
         # side-variables (collectors, redistribution bits) with the exact
-        # evaluator — MIQP fixes those during the solve.
+        # evaluator — MIQP fixes those during the solve. Both engines
+        # (HiGHS milp / batched lattice, DESIGN.md §12) run the same
+        # solve→polish→score pipeline; ``miqp_config.engine`` selects
+        # (default "auto" → lattice), and an explicit ``backend`` also
+        # drives the lattice engine's scoring chunks.
         solve_opts = EvalOptions(redistribution=True, async_exec=False)
         opts = options or EvalOptions(redistribution=True, async_exec=True)
         hw1 = hw.replace(diagonal_links=True)
-        out = run_miqp(task, hw1, objective, solve_opts,
-                       miqp_config or MIQPConfig())
+        mcfg = miqp_config or MIQPConfig()
+        if backend is not None:
+            mcfg = dataclasses.replace(mcfg, backend=backend)
+        out = run_miqp(task, hw1, objective, solve_opts, mcfg)
         part, rd = out.partition, out.redist_mask
         part, rd = _polish(task, hw1, opts, part, rd, objective,
                            backend=scoring_backend)

@@ -8,9 +8,9 @@ This module turns those hand-rolled Python loops into:
   * :func:`grid` — generic named-axis cartesian product (any axes, not
     just eval triples; ``benchmarks/fig3_motivation.py`` builds its
     netsim grid with it too);
-  * :func:`run_grid` — the timed per-point driver for solver sweeps
-    (MIQP work that cannot be batched across points), with an optional
-    per-point progress line;
+  * :func:`run_grid` — the timed per-point driver for work that stays
+    per-point (the HiGHS ``engine="milp"`` path and other external
+    solvers), with an optional per-point progress line;
   * :func:`netsim_sweep` — *batched* flow simulation (DESIGN.md §11):
     same-mesh-shape nets run through one compiled
     ``netsim_jax.simulate_pull_batch`` call, with cached records;
@@ -19,14 +19,18 @@ This module turns those hand-rolled Python loops into:
     options match are stacked along a grid axis and evaluated by ONE
     ``jax.jit`` call (``evaluator_jax.grid_fn`` = jit(vmap(vmap))); the
     numpy backend loops per point and is the parity reference;
-  * :func:`solve_grid` — *batched GA solves* (DESIGN.md §10): same-shape
-    points become islands of one device-resident ``jit(vmap(scan))``
-    evolution call (:mod:`repro.core.ga_jax`); the numpy backend runs the
-    vectorized host engine per point and is the fallback/reference;
+  * :func:`solve_grid` — *batched solver searches*: ``method="ga"``
+    (DESIGN.md §10) evolves same-shape points as islands of one
+    device-resident ``jit(vmap(scan))`` call (:mod:`repro.core.ga_jax`);
+    ``method="miqp"`` (DESIGN.md §12) runs the lattice-enumeration MIQP
+    engine (:mod:`repro.core.miqp_jax`) with same-shape points batched
+    along the grid axis of its chunked scoring calls. The numpy backend
+    runs the host engines per point and is the fallback/reference;
   * a process-wide result cache keyed by content fingerprints
     (backend + task ops + HWConfig + options + partition bytes for
-    evaluation records; + objective and the full GAConfig for solver
-    records), so repeated baselines across figure scripts — e.g.
+    evaluation records; + objective and the full solver config —
+    GAConfig or MIQPConfig, method-tagged — for solver records), so
+    repeated baselines across figure scripts — e.g.
     ``run.py`` invoking fig8 then fig9 on the same workloads — are
     evaluated once per backend (backends agree only to rtol 1e-9, so
     records are not shared across them — results must not depend on
@@ -79,10 +83,13 @@ def run_grid(
     emit: Callable[[dict, Any, float], None] | None = None,
     progress: bool | str = False,
 ) -> list[tuple[dict, Any, float]]:
-    """Timed per-point driver for sweeps whose body cannot be batched
-    (MIQP solves and other external-solver work). Calls ``fn(**point)``
-    for every point, returning ``(point, result, microseconds)`` triples;
-    ``emit`` (if given) is invoked per point for CSV-style reporting.
+    """Timed per-point driver for sweeps whose body stays per-point —
+    external-solver work such as the HiGHS ``engine="milp"`` MIQP path
+    or the pipelining ILP (batched MIQP lattice solves go through
+    :func:`solve_grid` with ``method="miqp"`` instead, DESIGN.md §12).
+    Calls ``fn(**point)`` for every point, returning
+    ``(point, result, microseconds)`` triples; ``emit`` (if given) is
+    invoked per point for CSV-style reporting.
 
     ``progress`` prints a ``point i/N`` line with the per-point solve time
     after each point (pass a string to label the sweep), so long solver
@@ -349,14 +356,17 @@ def netsim_sweep(
 
 
 # ----------------------------------------------------------- batched solves
-def _solver_fingerprint(pt: EvalPoint, backend: str, objective: str,
-                        cfg) -> tuple:
-    """Cache key for a GA solve. The full (frozen, hashable) GAConfig is
-    part of the key — any hyperparameter change is a different record —
-    and so is the backend: the vectorized engines draw from different
-    RNGs, so their results must never be served interchangeably."""
+def _solver_fingerprint(pt: EvalPoint, method: str, backend: str,
+                        objective: str, cfg) -> tuple:
+    """Cache key for a solver search. The method tag and the full
+    (frozen, hashable) solver config — GAConfig or MIQPConfig — are part
+    of the key, so GA and MIQP records on the same point never collide
+    and any hyperparameter change is a different record; so is the
+    backend: the GA engines draw from different RNGs and the lattice
+    scorers agree only to rtol 1e-9 (arg-min ties could flip), so
+    records must never be served across backends."""
     return (
-        "ga", backend,
+        method, backend,
         _task_fingerprint(pt.task),
         pt.hw,
         pt.options,
@@ -367,7 +377,17 @@ def _solver_fingerprint(pt: EvalPoint, backend: str, objective: str,
 
 def _copy_solver_record(rec):
     from .ga import GAResult
+    from .miqp import MIQPResult
 
+    if isinstance(rec, MIQPResult):
+        return MIQPResult(
+            partition=rec.partition.copy(),
+            redist_mask=rec.redist_mask.copy(),
+            objective=rec.objective,
+            milp_status=rec.milp_status,
+            milp_objective=rec.milp_objective,
+            engine=rec.engine,
+        )
     return GAResult(
         partition=rec.partition.copy(),
         redist_mask=rec.redist_mask.copy(),
@@ -383,25 +403,38 @@ def solve_grid(
     cfg=None,
     backend: str = "jax",
     cache: bool = True,
+    method: str = "ga",
 ) -> list:
-    """Run one GA search per point; returns ``GAResult`` records aligned
-    with ``points`` (DESIGN.md §10).
+    """Run one solver search per point; returns records aligned with
+    ``points`` — ``GAResult`` for ``method="ga"`` (DESIGN.md §10),
+    ``MIQPResult`` for ``method="miqp"`` (DESIGN.md §12).
 
     JAX backend: uncached points are grouped by shape signature — (n_ops,
     X, Y, n_entrances); the :class:`EvalOptions` statics live in the
-    compiled function's cache key — and each group's searches evolve as
-    *islands* of ONE ``jit(vmap(scan))`` call
-    (:func:`repro.core.ga_jax.solve_islands`). Numpy backend: per-point
-    vectorized host engine — the fallback used by ``run.py --backend
-    numpy``. Each island's RNG stream depends only on ``cfg.seed``, so a
-    point's result (and its cache record) is identical whether it is
-    solved alone or batched with others.
+    compiled function's cache key — and each group batches through ONE
+    compiled program per call: GA searches evolve as *islands* of one
+    ``jit(vmap(scan))`` call (:func:`repro.core.ga_jax.solve_islands`);
+    MIQP lattice searches share the grid axis of the chunked scoring
+    calls (:func:`repro.core.miqp_jax.solve_lattice_batch`). Numpy
+    backend: per-point host engines — the fallback used by ``run.py
+    --backend numpy``. A point's result (and its cache record) is
+    identical whether it is solved alone or batched with others: GA
+    island RNG depends only on ``cfg.seed``, and the lattice budgets are
+    deterministic candidate counts.
 
     ``pt.partition`` / ``pt.redist_mask`` are ignored — a solve searches
     the genome space, it does not score a fixed schedule.
-    ``backend="auto"`` resolves by ``cfg.population`` (the DESIGN.md §8
-    threshold) before fingerprinting, so auto-resolved records share the
-    cache with their concrete-backend equivalents."""
+    ``backend="auto"`` resolves before fingerprinting (by
+    ``cfg.population`` for GA, ``cfg.score_chunk`` for MIQP — the
+    DESIGN.md §8 threshold), so auto-resolved records share the cache
+    with their concrete-backend equivalents; likewise
+    ``MIQPConfig(engine="auto")`` resolves first. ``method="miqp"`` with
+    ``engine="milp"`` cannot batch — those points run serially through
+    :func:`repro.core.miqp.run_miqp` (still cached)."""
+    if method == "miqp":
+        return _solve_grid_miqp(points, objective, cfg, backend, cache)
+    if method != "ga":
+        raise ValueError(f"unknown method {method!r}; one of ('ga', 'miqp')")
     from .evaluator import resolve_auto_backend
     from .ga import GAConfig, run_ga
 
@@ -416,7 +449,7 @@ def solve_grid(
     fps: list[tuple | None] = [None] * len(points)
     for i, pt in enumerate(points):
         if cache:
-            fp = _solver_fingerprint(pt, backend, objective, cfg)
+            fp = _solver_fingerprint(pt, "ga", backend, objective, cfg)
             fps[i] = fp
             hit = _CACHE.get(fp)
             if hit is not None:
@@ -442,6 +475,68 @@ def solve_grid(
             groups.setdefault(sig, []).append(i)
         for sig, idxs in groups.items():
             outs = ga_jax.solve_islands(
+                [points[i].task for i in idxs],
+                [points[i].hw for i in idxs],
+                points[idxs[0]].options, objective, cfg)
+            for i, out in zip(idxs, outs):
+                records[i] = out
+
+    if cache:
+        for i in todo:
+            _CACHE[fps[i]] = _copy_solver_record(records[i])
+    return records
+
+
+def _solve_grid_miqp(points, objective, cfg, backend, cache) -> list:
+    """``solve_grid`` body for ``method="miqp"`` (DESIGN.md §12)."""
+    import dataclasses as _dc
+
+    from .evaluator import resolve_auto_backend
+    from .miqp import MIQPConfig, resolve_auto_engine, run_miqp
+
+    if cfg is None:
+        cfg = MIQPConfig()
+    engine = resolve_auto_engine(cfg.engine)
+    backend = (resolve_auto_backend(backend, cfg.score_chunk)
+               if engine == "lattice" else "numpy")
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"one of ('numpy', 'jax', 'auto')")
+    # Fingerprint the *resolved* config so auto-selected records share
+    # the cache with their concrete equivalents.
+    cfg = _dc.replace(cfg, engine=engine, backend=backend)
+    records: list = [None] * len(points)
+    todo: list[int] = []
+    fps: list[tuple | None] = [None] * len(points)
+    for i, pt in enumerate(points):
+        if cache:
+            fp = _solver_fingerprint(pt, "miqp", backend, objective, cfg)
+            fps[i] = fp
+            hit = _CACHE.get(fp)
+            if hit is not None:
+                _STATS["hits"] += 1
+                records[i] = _copy_solver_record(hit)
+                continue
+            _STATS["misses"] += 1
+        todo.append(i)
+
+    if todo and (engine == "milp" or backend == "numpy"):
+        # milp cannot batch; the numpy lattice is the per-point reference.
+        for i in todo:
+            pt = points[i]
+            records[i] = run_miqp(pt.task, pt.hw, objective, pt.options,
+                                  cfg, engine=engine)
+    elif todo:
+        from . import miqp_jax
+
+        groups: dict[tuple, list[int]] = {}
+        for i in todo:
+            pt = points[i]
+            sig = (len(pt.task), pt.hw.X, pt.hw.Y,
+                   pt.hw.topology.n_entrances, pt.options)
+            groups.setdefault(sig, []).append(i)
+        for sig, idxs in groups.items():
+            outs = miqp_jax.solve_lattice_batch(
                 [points[i].task for i in idxs],
                 [points[i].hw for i in idxs],
                 points[idxs[0]].options, objective, cfg)

@@ -1,0 +1,305 @@
+"""MIQP engine tests (DESIGN.md §12): lattice-vs-exhaustive parity,
+candidate-budget fallback, solve_grid batching/cache isolation, and the
+approx_inverse irregular-hardware regression."""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (EvalOptions, Evaluator, GemmOp, Task, make_hw,
+                        sweep)
+from repro.core.miqp import (MIQPConfig, approx_inverse,
+                             resolve_auto_engine, run_miqp)
+from repro.core import miqp_jax
+
+OPTS = EvalOptions(redistribution=True, async_exec=False)
+
+
+def tiny_task():
+    """Windows small enough that the joint lattice is brute-forceable."""
+    return Task("tiny", [GemmOp("a", M=64, K=64, N=64),
+                         GemmOp("b", M=64, K=64, N=96, chained=True)])
+
+
+def tiny_hw(**kw):
+    return make_hw("A", 2, "hbm", **kw)
+
+
+def brute_force(task, hw, objective, options, slack=2):
+    """Independent exhaustive reference: every unit composition in the
+    Sec.-6.2 window per op/axis, cross product over ops, scored by the
+    exact evaluator with MIQP's fixed collector/redistribution."""
+    from repro.core.workload import partition_domain
+
+    ev = Evaluator(task, hw, options)
+    lo, hi = partition_domain(task, hw.X, hw.Y, hw.R, hw.C, slack)
+    rd = ev.chain_valid & options.redistribution
+
+    def axis(total_units, parts, l, h):
+        out = []
+        for combo in itertools.product(range(l, h + 1), repeat=parts):
+            if sum(combo) == total_units:
+                out.append(combo)
+        return out
+
+    def unpad(units, unit, total):
+        arr = np.asarray(units, dtype=np.int64) * unit
+        d = int(arr.sum()) - total
+        k = int(np.argmax(arr))
+        arr[k] -= d
+        if arr[k] < 0:
+            arr[k + 1 if k + 1 < len(arr) else k - 1] += arr[k]
+            arr[k] = 0
+        return arr
+
+    per_op = []
+    for i, op in enumerate(task.ops):
+        Mu = int(np.ceil(op.M / hw.R))
+        Nu = int(np.ceil(op.N / hw.C))
+        xs = axis(Mu, hw.X, int(lo[i, 0]), int(hi[i, 0]))
+        ys = axis(Nu, hw.Y, int(lo[i, 1]), int(hi[i, 1]))
+        per_op.append([(unpad(x, hw.R, op.M), unpad(y, hw.C, op.N))
+                       for x in xs for y in ys])
+
+    best = np.inf
+    coll = np.full(len(task), hw.Y // 2, dtype=np.int64)
+    for combo in itertools.product(*per_op):
+        Px = np.stack([c[0] for c in combo])
+        Py = np.stack([c[1] for c in combo])
+        from repro.core.workload import Partition
+
+        res = ev.evaluate(Partition(Px, Py, coll.copy()), rd)
+        val = getattr(res, objective if objective != "edp" else "edp")
+        best = min(best, val)
+    return best
+
+
+@pytest.mark.parametrize("objective", ["latency", "edp"])
+def test_lattice_matches_bruteforce(objective):
+    """Exact mode == an independent exhaustive scan of the window
+    lattice (the tentpole's correctness anchor)."""
+    task, hw = tiny_task(), tiny_hw(diagonal_links=True)
+    cfg = MIQPConfig(backend="numpy")
+    r = run_miqp(task, hw, objective, OPTS, cfg, engine="lattice")
+    assert r.milp_status.startswith("lattice exact")
+    assert "capped" not in r.milp_status
+    ref = brute_force(task, hw, objective, OPTS)
+    assert r.objective == pytest.approx(ref, rel=1e-12)
+    r.partition.validate(task)
+
+
+def test_lattice_budget_fallback_beam():
+    """Forcing the joint cross-product over the candidate budget must
+    switch to beam mode and still return a valid schedule no worse than
+    the anchor (uniform projection) and no better than the exact
+    optimum."""
+    task, hw = tiny_task(), tiny_hw(diagonal_links=True)
+    exact = run_miqp(task, hw, "latency", OPTS,
+                     MIQPConfig(backend="numpy"), engine="lattice")
+    beam = run_miqp(task, hw, "latency", OPTS,
+                    MIQPConfig(backend="numpy", candidate_budget=1),
+                    engine="lattice")
+    assert beam.milp_status.startswith("lattice beam")
+    beam.partition.validate(task)
+    assert beam.objective >= exact.objective - 1e-18
+    # the tiny space fits inside one beam pass, so beam == exact here
+    assert beam.objective == pytest.approx(exact.objective, rel=1e-12)
+
+
+def test_lattice_flow_congestion_and_energy_objective():
+    """The lattice scores the evaluator directly, so flow congestion and
+    the energy objective come for free (the MILP models neither)."""
+    task, hw = tiny_task(), tiny_hw()
+    flow = run_miqp(task, hw, "latency",
+                    EvalOptions(redistribution=True, async_exec=False,
+                                congestion="flow"),
+                    MIQPConfig(backend="numpy"), engine="lattice")
+    flow.partition.validate(task)
+    assert np.isfinite(flow.objective) and flow.objective > 0
+    ref = brute_force(task, hw, "latency",
+                      EvalOptions(redistribution=True, async_exec=False,
+                                  congestion="flow"))
+    assert flow.objective == pytest.approx(ref, rel=1e-12)
+    en = run_miqp(task, hw, "energy", OPTS, MIQPConfig(backend="numpy"),
+                  engine="lattice")
+    assert en.objective == pytest.approx(
+        brute_force(task, hw, "energy", OPTS), rel=1e-12)
+
+
+def test_lattice_leq_milp_incumbent():
+    """The acceptance contract: the lattice optimum is never worse than
+    the HiGHS incumbent's exact score (same solve options)."""
+    scipy = pytest.importorskip("scipy")
+    del scipy
+    task = Task("chain3", [
+        GemmOp("g0", M=512, K=256, N=512),
+        GemmOp("g1", M=512, K=512, N=256, chained=True),
+        GemmOp("g2", M=512, K=256, N=512, chained=True)])
+    hw = make_hw("A", 4, "hbm", diagonal_links=True)
+    lat = run_miqp(task, hw, "latency", OPTS, MIQPConfig(),
+                   engine="lattice")
+    milp = run_miqp(task, hw, "latency", OPTS,
+                    MIQPConfig(time_limit=20), engine="milp")
+    assert lat.objective <= milp.objective * (1 + 1e-9)
+    if "Optimal" in milp.milp_status:
+        # where HiGHS proves model optimality, the proven model optimum
+        # (µs) bounds the exact optimum to the linearization accuracy
+        # (the 2% of test_miqp_model_matches_evaluator) — the lattice
+        # result must sit under that bound too
+        assert lat.objective <= milp.milp_objective * 1e-6 * 1.02
+
+
+def test_engine_resolution_and_result_fields():
+    assert resolve_auto_engine("auto") == "lattice"
+    assert resolve_auto_engine("milp") == "milp"
+    with pytest.raises(ValueError):
+        resolve_auto_engine("simplex")
+    task, hw = tiny_task(), tiny_hw()
+    r = run_miqp(task, hw, "latency", OPTS, MIQPConfig(backend="numpy"))
+    assert r.engine == "lattice"        # auto default
+    # latency reports the exact objective in µs as the model objective
+    assert r.milp_objective == pytest.approx(r.objective * 1e6)
+    with pytest.raises(ValueError):
+        run_miqp(task, hw, "throughput", OPTS,
+                 MIQPConfig(backend="numpy"))
+
+
+def test_solve_grid_miqp_batched_matches_solo():
+    """A point's record is identical whether solved alone or batched
+    with a same-shape neighbour (the §9 cache invariant — lattice
+    budgets are deterministic candidate counts, not wall-clock)."""
+    task = tiny_task()
+    hw_a = tiny_hw(diagonal_links=True)
+    hw_b = tiny_hw()
+    cfg = MIQPConfig(backend="numpy")
+    pts = [sweep.EvalPoint(task, hw_a, OPTS),
+           sweep.EvalPoint(task, hw_b, OPTS)]
+    recs = sweep.solve_grid(pts, "latency", cfg, backend="numpy",
+                            method="miqp", cache=False)
+    for pt, rec in zip(pts, recs):
+        solo = run_miqp(pt.task, pt.hw, "latency", OPTS, cfg,
+                        engine="lattice")
+        assert rec.objective == solo.objective
+        assert np.array_equal(rec.partition.Px, solo.partition.Px)
+        assert np.array_equal(rec.partition.Py, solo.partition.Py)
+        assert np.array_equal(rec.redist_mask, solo.redist_mask)
+
+
+def test_solve_grid_miqp_mixed_chain_group_matches_solo():
+    """Two tasks with the same shape signature but different chain
+    structures land in ONE lockstep group — per-point budgets (pair-
+    refine k, range-move masks) must still make each record identical
+    to its solo solve."""
+    chained = tiny_task()
+    unchained = Task("tiny2", [GemmOp("a", M=64, K=64, N=64),
+                               GemmOp("b", M=64, K=64, N=96)])
+    hw = tiny_hw(diagonal_links=True)
+    cfg = MIQPConfig(backend="numpy", candidate_budget=1)  # force beam
+    pts = [sweep.EvalPoint(chained, hw, OPTS),
+           sweep.EvalPoint(unchained, hw, OPTS)]
+    recs = sweep.solve_grid(pts, "latency", cfg, backend="numpy",
+                            method="miqp", cache=False)
+    for pt, rec in zip(pts, recs):
+        solo = run_miqp(pt.task, pt.hw, "latency", OPTS, cfg,
+                        engine="lattice")
+        assert rec.objective == solo.objective
+        assert np.array_equal(rec.partition.Px, solo.partition.Px)
+        assert np.array_equal(rec.partition.Py, solo.partition.Py)
+
+
+def test_solve_grid_miqp_unequal_lattice_sizes_group():
+    """Same shape signature, different dims → different per-layer
+    candidate counts inside ONE lockstep group. The group-wide max
+    extension indices must clip (not fault) on the smaller point, and
+    each record must still equal its solo solve — on the jax backend,
+    whose grouped path is the only one that locksteps."""
+    big = Task("big", [GemmOp("a", M=256, K=64, N=128),
+                       GemmOp("b", M=256, K=128, N=96, chained=True)])
+    small = tiny_task()                    # same n_ops, smaller windows
+    hw = tiny_hw(diagonal_links=True)
+    cfg = MIQPConfig(candidate_budget=1)   # force the beam lockstep
+    pts = [sweep.EvalPoint(big, hw, OPTS),
+           sweep.EvalPoint(small, hw, OPTS)]
+    recs = sweep.solve_grid(pts, "latency", cfg, backend="jax",
+                            method="miqp", cache=False)
+    for pt, rec in zip(pts, recs):
+        solo = run_miqp(pt.task, pt.hw, "latency", OPTS, cfg,
+                        engine="lattice")
+        assert rec.objective == solo.objective
+        assert np.array_equal(rec.partition.Px, solo.partition.Px)
+        assert np.array_equal(rec.partition.Py, solo.partition.Py)
+
+
+def test_solve_grid_miqp_cache_axis_isolation():
+    """MIQP records cache under a method-tagged key: repeats hit, and
+    neither objective/config changes nor GA records on the same points
+    can collide."""
+    from repro.core.ga import GAConfig
+
+    task = tiny_task()
+    hw = tiny_hw(diagonal_links=True)
+    cfg = MIQPConfig(backend="numpy")
+    pts = [sweep.EvalPoint(task, hw, OPTS)]
+    sweep.clear_cache()
+    r1 = sweep.solve_grid(pts, "latency", cfg, backend="numpy",
+                          method="miqp")
+    assert sweep.cache_stats() == {"hits": 0, "misses": 1}
+    r2 = sweep.solve_grid(pts, "latency", cfg, backend="numpy",
+                          method="miqp")
+    assert sweep.cache_stats() == {"hits": 1, "misses": 1}
+    assert r2[0].objective == r1[0].objective
+    # cached records are copies — mutating one must not poison the cache
+    r2[0].partition.Px[:] = -1
+    r3 = sweep.solve_grid(pts, "latency", cfg, backend="numpy",
+                          method="miqp")
+    assert sweep.cache_stats() == {"hits": 2, "misses": 1}
+    assert np.array_equal(r3[0].partition.Px, r1[0].partition.Px)
+    # a different objective and a different config are different records
+    sweep.solve_grid(pts, "edp", cfg, backend="numpy", method="miqp")
+    assert sweep.cache_stats()["misses"] == 2
+    sweep.solve_grid(pts, "latency",
+                     dataclasses.replace(cfg, beam_width=4),
+                     backend="numpy", method="miqp")
+    assert sweep.cache_stats()["misses"] == 3
+    # auto engine resolves before fingerprinting: shares the record
+    sweep.solve_grid(pts, "latency",
+                     dataclasses.replace(cfg, engine="auto"),
+                     backend="numpy", method="miqp")
+    assert sweep.cache_stats()["hits"] == 3
+    # GA searches on the identical points live on their own cache axis
+    ga = sweep.solve_grid(pts, "latency",
+                          GAConfig(generations=2, population=8),
+                          backend="numpy", method="ga")
+    from repro.core.ga import GAResult
+
+    assert isinstance(ga[0], GAResult)
+    assert sweep.cache_stats()["misses"] == 4
+    sweep.clear_cache()
+
+
+def test_solve_grid_method_validation():
+    with pytest.raises(ValueError):
+        sweep.solve_grid([], method="annealing")
+
+
+def test_approx_inverse_irregular_hardware_regression():
+    """The irregular-hardware extension feeds *arrays* of variable
+    denominators (per-entrance bandwidth terms) and the lattice engine
+    may trace the expression under jit — the trick must stay a pure
+    broadcastable expression with the documented (x/c)² error."""
+    c = np.array([0.25, 1.0, 16.0, 1e6])
+    x = 0.05 * c
+    out = approx_inverse(c, x)
+    np.testing.assert_allclose(out, (c - x) / (c * c), rtol=1e-15)
+    rel = np.abs(out - 1.0 / (c + x)) * (c + x)
+    np.testing.assert_allclose(rel, (x / c) ** 2, atol=1e-12)
+
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda xx: approx_inverse(16.0, xx))
+    xs = jnp.linspace(-1.0, 1.0, 7)
+    np.testing.assert_allclose(np.asarray(f(xs)),
+                               (16.0 - np.asarray(xs)) / 256.0,
+                               rtol=1e-12)
