@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test smoke bench-fast bench-smoke ga-fitness ga-evolve netsim \
-	miqp-solve quickstart
+	miqp-solve pipeline-schedule quickstart
 
 # Tier-1 verify — the command CI and the roadmap pin.
 test:
@@ -24,12 +24,14 @@ bench-fast:
 	$(PY) -m benchmarks.run
 
 # Tiny-profile end-to-end benchmarks (seconds, not minutes) — smoke
-# check that the GA engines + solve_grid, the netsim backends, and the
-# MIQP engines (milp/lattice parity) still run and write artifacts.
+# check that the GA engines + solve_grid, the netsim backends, the
+# MIQP engines (milp/lattice parity), and the pipelining engines
+# (python/vectorized exact-parity gate) still run and write artifacts.
 bench-smoke:
 	$(PY) -m benchmarks.perf_iterations --cell ga_evolve --smoke
 	$(PY) -m benchmarks.perf_iterations --cell netsim --smoke
 	$(PY) -m benchmarks.perf_iterations --cell miqp_solve --smoke
+	$(PY) -m benchmarks.perf_iterations --cell pipeline_schedule --smoke
 
 # Backend shootout for the GA fitness hot loop (DESIGN.md §8).
 ga-fitness:
@@ -46,6 +48,10 @@ netsim:
 # MIQP engine shootout + exact-parity audit (DESIGN.md §12).
 miqp-solve:
 	$(PY) -m benchmarks.perf_iterations --cell miqp_solve
+
+# RCPSP pipelining engine shootout + exact-parity gate (DESIGN.md §13).
+pipeline-schedule:
+	$(PY) -m benchmarks.perf_iterations --cell pipeline_schedule
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -4,42 +4,68 @@ Paper claims: the RCPSP (ILP) pipeliner finds ample overlap and the
 per-sample speedup stays roughly constant across batch sizes.
 
 Grid driving (benchmarks/README.md): one MIQP schedule per workload,
-then the (workload × batch) pipelining grid runs via ``sweep.run_grid``.
+then the whole (workload × batch) pipelining grid runs *batched* through
+``sweep.pipeline_sweep`` — one compiled vectorized-SGS call per
+(n_ops, batch) shape group, records cached process-wide (DESIGN.md §13).
+A congestion-aware variant re-derives the segment durations from netsim
+arrival times (``ScheduleResult.segments(congestion="flow")``,
+DESIGN.md §11) and pipelines those through the same batched path. The
+MILP refinement (which cannot batch) stays per-point via
+``sweep.run_grid``.
 """
 from __future__ import annotations
 
 from repro.core import make_hw, optimize, sweep
 from repro.core.miqp import MIQPConfig
+from repro.core.pipelining import PipelineConfig
+from repro.core.sweep import PipelinePoint
 from repro.graphs import WORKLOADS
 
 from .common import emit, save_json, timed
+
+BATCHES = (2, 4, 8, 16)
 
 
 def main(fast: bool = False, backend: str = "jax"):
     hw = make_hw("A", 4, "hbm")
     results = {}
+    stats0 = sweep.cache_stats()
     wnames = ("alexnet",) if fast else ("alexnet", "vit", "hydranet")
     scheds = {w: optimize(WORKLOADS[w](batch=1), hw, "miqp",
                           backend=backend,
                           miqp_config=MIQPConfig(time_limit=30))
               for w in wnames}
 
-    def report(pt, r, us):
-        wname, batch = pt["wname"], pt["batch"]
-        results[f"{wname}/b{batch}"] = r.speedup
-        emit(f"fig11/{wname}/batch{batch}", us,
+    # Batched pipelining grid: every (workload × batch × congestion)
+    # point through pipeline_sweep — same-(n_ops, batch) points share one
+    # compiled call; the congestion="flow" variants scheduled alongside
+    # the regime ones cost no extra compilations (durations are data).
+    cfg = PipelineConfig(engine="vectorized", backend=backend)
+    pts, keys = [], []
+    for cong in ("regime", "flow"):
+        for w in wnames:
+            segs = scheds[w].segments(None if cong == "regime" else cong)
+            for b in BATCHES:
+                pts.append(PipelinePoint(segs, b))
+                keys.append((w, b, cong))
+    recs, us = timed(sweep.pipeline_sweep, pts, cfg, backend)
+    for (w, b, cong), r in zip(keys, recs):
+        tag = "" if cong == "regime" else "/flow"
+        results[f"{w}/b{b}{tag}"] = r.speedup
+        emit(f"fig11/{w}/batch{b}{tag}", us / len(pts),
              f"speedup={r.speedup:.3f}x per_sample_us="
              f"{r.per_sample*1e6:.1f}")
 
+    # MILP refinement on the smallest instance (paper: solver-based) —
+    # per-point, the one pipelining path that cannot batch.
     sweep.run_grid(
-        sweep.grid(wname=wnames, batch=(2, 4, 8, 16)),
-        lambda wname, batch: scheds[wname].pipeline(batch),
-        emit=report)
-
-    # ILP refinement on the smallest instance (paper: solver-based)
-    for wname in wnames:
-        r, us = timed(scheds[wname].pipeline, 4, True)
-        emit(f"fig11/{wname}/batch4_ilp", us, f"speedup={r.speedup:.3f}x")
+        sweep.grid(wname=wnames),
+        lambda wname: scheds[wname].pipeline(4, use_milp=True),
+        emit=lambda pt, r, us: emit(f"fig11/{pt['wname']}/batch4_ilp", us,
+                                    f"speedup={r.speedup:.3f}x"))
+    stats = sweep.cache_stats()
+    print(f"# fig11: sweep cache +{stats['hits'] - stats0['hits']} hits "
+          f"/ +{stats['misses'] - stats0['misses']} misses")
     save_json("fig11", results)
 
 

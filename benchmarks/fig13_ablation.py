@@ -12,7 +12,8 @@ a shape signature, so both land in one compiled call per workload shape;
 DESIGN.md §10); the same ablation grid is solved by the batched lattice
 MIQP engine through ``sweep.solve_grid(method="miqp")`` (DESIGN.md §12 —
 the same shape sharing applies); pipelining is layered on the
-diagonal-link GA result.
+diagonal-link GA result through the batched ``sweep.pipeline_sweep``
+(DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -21,7 +22,7 @@ import time
 from repro.core import EvalOptions, Evaluator, make_hw, refine_schedule, sweep
 from repro.core.ga import GAConfig
 from repro.core.miqp import MIQPConfig
-from repro.core.pipelining import pipeline_batch
+from repro.core.sweep import PipelinePoint
 from repro.graphs import WORKLOADS
 
 from .common import emit, save_json
@@ -94,11 +95,17 @@ def main(fast: bool = False, backend: str = "jax"):
         mi_out[(w, v)] = base[w] / rec["latency"]
         emit(f"fig13/{w}/{v}/miqp", 0.0, f"{mi_out[(w, v)]:.3f}x")
 
+    # Pipelining on top of the diagonal-link GA result: all workloads'
+    # batch-4 instances through one batched pipeline_sweep (§13).
+    segs = {}
     for wname in wnames:
         ga2 = ga_out[(wname, "plus_diagonal")]
         ev = Evaluator(tasks[wname], hw_diag, opts, backend=backend)
-        res = ev.evaluate(ga2.partition, ga2.redist_mask)
-        pipe = pipeline_batch(res.segments(), 4)
+        segs[wname] = ev.evaluate(ga2.partition, ga2.redist_mask).segments()
+    pipes = sweep.pipeline_sweep(
+        [PipelinePoint(segs[w], 4) for w in wnames], backend=backend)
+    for wname, pipe in zip(wnames, pipes):
+        ga2 = ga_out[(wname, "plus_diagonal")]
         part_sp = base[wname] / ga_out[(wname, "partition_only")].objective
         diag_sp = base[wname] / ga2.objective
         pipe_sp = base[wname] / (pipe.pipelined / 4)

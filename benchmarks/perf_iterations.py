@@ -32,6 +32,15 @@ lattice ``solve_grid``, DESIGN.md §12) with exact-parity checks —
 lattice optimum ≤ the HiGHS incumbent on every point, including the
 fig13 ablation points:
     PYTHONPATH=src python -m benchmarks.perf_iterations --cell miqp_solve
+
+The ``pipeline_schedule`` cell benchmarks the RCPSP pipelining engines
+on the fig11-style (workload × batch × segment-variant) grid (serial
+per-point python heapq ``run_grid`` vs batched vectorized-SGS
+``pipeline_sweep``, DESIGN.md §13) with an exact-parity gate — the
+engines must agree to float64 round-off on every point, nonzero exit
+otherwise:
+    PYTHONPATH=src python -m benchmarks.perf_iterations \\
+        --cell pipeline_schedule
 """
 import argparse
 import json
@@ -114,7 +123,9 @@ def main():
                          "DESIGN.md §10) | netsim (flow-simulator "
                          "backend shootout, DESIGN.md §11) | miqp_solve "
                          "(MIQP engine shootout + exact-parity checks, "
-                         "DESIGN.md §12)")
+                         "DESIGN.md §12) | pipeline_schedule (RCPSP "
+                         "pipelining engine shootout + exact-parity "
+                         "gate, DESIGN.md §13)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny populations/generations — the no-regression "
                          "smoke profile used by `make bench-smoke`")
@@ -130,6 +141,9 @@ def main():
         return
     if args.cell == "miqp_solve":
         run_miqp_solve(smoke=args.smoke)
+        return
+    if args.cell == "pipeline_schedule":
+        run_pipeline_schedule(smoke=args.smoke)
         return
     from repro.launch import dryrun  # noqa: F401 -- sets the 512-device
     from repro.launch.mesh import make_production_mesh  # XLA_FLAGS first
@@ -516,6 +530,110 @@ def run_miqp_solve(smoke: bool = False):
         # gate loudly (the artifact above still records the rows).
         raise SystemExit("miqp_solve: lattice worse than the HiGHS "
                          "incumbent on at least one point")
+
+
+def run_pipeline_schedule(smoke: bool = False):
+    """RCPSP pipelining engine shootout (DESIGN.md §13).
+
+    Times a fig11-style (workload × batch × segment-variant) pipelining
+    grid two ways — the serial per-point python heapq SGS this repo used
+    before (``engine="python"`` through ``run_grid``) and the batched
+    vectorized SGS through ``sweep.pipeline_sweep`` (one compiled call
+    per (n_ops, batch) shape group; timed warm — the compiled step is
+    process-cached and amortizes across every same-shape sweep). Segment
+    variants come from the Table-3 scheduling methods under both
+    congestion models (``ScheduleResult.segments(congestion=...)``,
+    DESIGN.md §11), so every group carries several duration sets through
+    one executable — exactly the figure-grid batching pattern.
+
+    Parity is a correctness gate, not a perf number: the engines are
+    bit-identical by construction (§13), so ANY makespan divergence
+    beyond float64 round-off exits nonzero (the artifact still records
+    the rows). A solo-vs-batched spot check enforces the §9 cache
+    invariant on the same run. Acceptance bar: ≥5× end-to-end on the
+    grid. ``smoke=True`` shrinks everything to a seconds-long
+    no-regression check (`make bench-smoke`), skips the verdict, and
+    writes ``pipeline_schedule_smoke.json``."""
+    from repro.core import make_hw, optimize, sweep
+    from repro.core.pipelining import PipelineConfig, pipeline_batch
+    from repro.core.sweep import PipelinePoint
+    from repro.graphs import WORKLOADS
+
+    hw = make_hw("A", 4, "hbm")
+    if smoke:
+        wnames, batches = ("alexnet",), (4, 8)
+        methods, congs = ("baseline", "simba"), ("regime",)
+    else:
+        wnames, batches = ("alexnet", "vit", "hydranet"), (4, 16, 64)
+        methods = ("baseline", "simba", "miqp")
+        congs = ("regime", "flow")
+
+    segs = {}
+    for w in wnames:
+        for m in methods:
+            res = optimize(WORKLOADS[w](batch=1), hw, m)
+            for c in congs:
+                segs[(w, m, c)] = res.segments(
+                    None if c == "regime" else c)
+    pts = [PipelinePoint(segs[k], b) for k in segs for b in batches]
+    keys = [(k, b) for k in segs for b in batches]
+
+    # -- serial python-heapq leg (the pre-§13 path)
+    py_cfg = PipelineConfig(engine="python")
+    t0 = time.perf_counter()
+    serial = sweep.run_grid(
+        [{"pt": pt} for pt in pts],
+        lambda pt: pipeline_batch(pt.segments, pt.batch, config=py_cfg))
+    serial_s = time.perf_counter() - t0
+
+    # -- batched vectorized leg (timed warm, cache off so work is real)
+    vec_cfg = PipelineConfig(engine="vectorized", backend="jax")
+    sweep.pipeline_sweep(pts, vec_cfg, cache=False)   # warm the compiles
+    t0 = time.perf_counter()
+    batched = sweep.pipeline_sweep(pts, vec_cfg, cache=False)
+    batched_s = time.perf_counter() - t0
+    speedup = serial_s / batched_s
+
+    # -- exact-parity audit: python == vectorized on every point, and
+    #    solo == batched on a spot-check subset (§9 cache invariant).
+    rows, max_err = [], 0.0
+    for ((w, m, c), b), (_, sr, _), br in zip(keys, serial, batched):
+        err = (abs(sr.pipelined - br.pipelined)
+               / max(sr.pipelined, 1e-300))
+        max_err = max(max_err, err)
+        rows.append({"workload": w, "method": m, "congestion": c,
+                     "batch": b, "python_makespan": sr.pipelined,
+                     "vectorized_makespan": br.pipelined, "rel_err": err})
+    solo_ok = True
+    for pt, br in list(zip(pts, batched))[::7]:
+        solo = pipeline_batch(pt.segments, pt.batch, config=vec_cfg)
+        solo_ok &= solo.pipelined == br.pipelined
+    parity_ok = max_err <= 1e-12 and solo_ok
+
+    print(f"[perf] pipeline_schedule grid={len(pts)} points: "
+          f"serial-python={serial_s:.2f}s batched={batched_s:.2f}s "
+          f"speedup={speedup:.2f}x | max rel err {max_err:.1e} "
+          f"solo==batched={solo_ok} "
+          f"parity={'OK' if parity_ok else 'FAIL'}")
+    out = {"points": len(pts), "serial_python_s": serial_s,
+           "batched_s": batched_s, "speedup": speedup,
+           "max_rel_err": max_err, "solo_eq_batched": solo_ok,
+           "parity_ok": parity_ok, "rows": rows}
+    if not smoke:
+        ok = speedup >= 5.0 and parity_ok
+        out["verdict"] = ("confirmed (>=5x batched, exact parity)"
+                          if ok else "refuted")
+        print(f"[perf] pipeline_schedule -> {out['verdict']}")
+    os.makedirs(ART, exist_ok=True)
+    name = ("pipeline_schedule_smoke.json" if smoke
+            else "pipeline_schedule.json")
+    with open(os.path.join(ART, name), "w") as f:
+        json.dump(out, f, indent=1)
+    if not parity_ok:
+        # A vectorized schedule that diverges from the serial SGS (or a
+        # batched record that differs from its solo equivalent) is a
+        # correctness bug — fail the smoke/CI gate loudly.
+        raise SystemExit("pipeline_schedule: engine parity violated")
 
 
 def run_smollm(mesh):

@@ -17,7 +17,10 @@ Layers:
     engine (exact arg-min over the Sec.-6.2 search lattice,
     DESIGN.md §12); :mod:`repro.core.simba` — the heuristic baseline.
   * :mod:`repro.core.pipelining` — RCPSP cross-sample pipelining
-    (Sec. 5.4).
+    (Sec. 5.4): serial list scheduler + time-indexed MILP;
+    :mod:`repro.core.pipelining_jax` — the batched vectorized SGS
+    (bit-identical to the serial engine, one jitted call per
+    (n_ops, batch) shape group, DESIGN.md §13).
   * :mod:`repro.core.topology` — shared mesh geometry: link enumeration,
     XY/diagonal routing, entrance masks, hop matrices (DESIGN.md §11).
   * :mod:`repro.core.netsim` — flow-level NoP simulator (Fig. 3):
@@ -35,5 +38,9 @@ from .ga import GAConfig, GAResult, run_ga  # noqa: F401
 from .hw import HWConfig, MCMType, Topology, make_hw  # noqa: F401
 from .miqp import (MIQPConfig, MIQPResult, run_miqp,  # noqa: F401
                    resolve_auto_engine)
-from .sweep import EvalPoint, eval_sweep, solve_grid  # noqa: F401
+from .pipelining import (PIPELINE_ENGINES, PipelineConfig,  # noqa: F401
+                         PipelineResult, pipeline_batch,
+                         resolve_auto_pipeline_engine)
+from .sweep import (EvalPoint, PipelinePoint, eval_sweep,  # noqa: F401
+                    pipeline_sweep, solve_grid)
 from .workload import GemmOp, Partition, Task, uniform_partition  # noqa: F401

@@ -17,7 +17,7 @@ from .evaluator import (EvalOptions, EvalResult, Evaluator,
 from .ga import GAConfig, run_ga
 from .hw import HWConfig
 from .miqp import MIQPConfig, run_miqp
-from .pipelining import PipelineResult, pipeline_batch
+from .pipelining import PipelineConfig, PipelineResult, pipeline_batch
 from .simba import simba_partition
 from .sweep import EvalPoint, eval_sweep
 from .workload import Partition, Task, uniform_partition
@@ -37,6 +37,15 @@ class ScheduleResult:
     eval: EvalResult
     baseline: EvalResult
     solve_seconds: float
+    # Evaluation context (DESIGN.md §13): the task, the *actual* hw the
+    # schedule was scored on (optimize() toggles diagonal links per
+    # method), the EvalOptions used, and the scoring backend — what
+    # segments() needs to re-derive per-op durations under a different
+    # congestion model. Defaulted for back-compat construction.
+    task: Task | None = None
+    hw_used: HWConfig | None = None
+    options: EvalOptions | None = None
+    backend: str = "numpy"
 
     @property
     def latency(self) -> float:
@@ -52,8 +61,48 @@ class ScheduleResult:
             return self.baseline.edp / self.eval.edp
         return self.baseline.latency / self.eval.latency
 
-    def pipeline(self, batch: int, use_milp: bool = False) -> PipelineResult:
-        return pipeline_batch(self.eval.segments(), batch, use_milp=use_milp)
+    def segments(self, congestion: str | None = None
+                 ) -> list[tuple[str, float, float, float]]:
+        """Per-op ``(name, t_in, t_comp, t_out)`` durations of this
+        schedule for the RCPSP pipeliner (Sec. 5.4 / DESIGN.md §13).
+
+        ``congestion`` re-scores the schedule under a different
+        congestion model (DESIGN.md §11) — ``"flow"`` makes the segment
+        durations come from simulated netsim arrival times instead of
+        the closed-form regime pick. Routed through the cached
+        :func:`repro.core.sweep.eval_sweep`, so repeated pipelining
+        studies on one schedule evaluate it once per congestion mode."""
+        if congestion is None:
+            return self.eval.segments()
+        if self.options is None:
+            # Back-compat construction without the context fields must
+            # not silently return wrong-congestion durations.
+            raise ValueError(
+                "congestion-aware segments need the evaluation context "
+                "(task/hw_used/options) — construct the ScheduleResult "
+                "via optimize()")
+        if congestion == self.options.congestion:
+            return self.eval.segments()
+        opts = dataclasses.replace(self.options, congestion=congestion)
+        rec = eval_sweep([EvalPoint(self.task, self.hw_used, opts,
+                                    self.partition, self.redist_mask)],
+                         backend=self.backend)[0]
+        return [(f"op{i}", float(rec["t_in"][i]), float(rec["t_comp"][i]),
+                 float(rec["t_out"][i]))
+                for i in range(len(rec["t_in"]))]
+
+    def pipeline(self, batch: int, use_milp: bool = False,
+                 config: PipelineConfig | None = None,
+                 congestion: str | None = None) -> PipelineResult:
+        """Cross-sample pipelining of this schedule (Sec. 5.4).
+
+        ``config`` selects the scheduler engine (DESIGN.md §13);
+        ``congestion="flow"`` derives the segment durations from netsim
+        arrival times (see :meth:`segments`). Batched (workload × batch)
+        grids should go through
+        :func:`repro.core.sweep.pipeline_sweep` instead."""
+        return pipeline_batch(self.segments(congestion), batch,
+                              use_milp=use_milp, config=config)
 
 
 def _polish(task: Task, hw: HWConfig, opts: EvalOptions, part: Partition,
@@ -179,28 +228,32 @@ def optimize(
     base = baseline_result(task, hw, backend=scoring_backend)
     t0 = time.perf_counter()
     if method == "baseline":
-        hw0 = hw.replace(diagonal_links=False)
+        hw_used = hw.replace(diagonal_links=False)
+        opts = EvalOptions()
         part = uniform_partition(task, hw.X, hw.Y)
-        ev = Evaluator(task, hw0, EvalOptions(), backend=scoring_backend)
+        ev = Evaluator(task, hw_used, opts, backend=scoring_backend)
         res = ev.evaluate(part)
         rd = np.zeros(len(task), dtype=bool)
     elif method == "simba":
-        hw0 = hw.replace(diagonal_links=False)
-        part = simba_partition(task, hw0)
-        ev = Evaluator(task, hw0, EvalOptions(), backend=scoring_backend)
+        hw_used = hw.replace(diagonal_links=False)
+        opts = EvalOptions()
+        part = simba_partition(task, hw_used)
+        ev = Evaluator(task, hw_used, opts, backend=scoring_backend)
         res = ev.evaluate(part)
         rd = np.zeros(len(task), dtype=bool)
     elif method == "ga":
         opts = options or EvalOptions(redistribution=True, async_exec=True)
-        hw1 = hw.replace(diagonal_links=True)
+        hw_used = hw.replace(diagonal_links=True)
         cfg = ga_config or GAConfig()
         # Score with the engine the GA fitness actually ran on, so a
         # GAConfig(backend="jax") caller never silently mixes engines.
         ga_backend = resolve_auto_backend(backend or cfg.backend,
                                           cfg.population)
-        out = run_ga(task, hw1, objective, opts, cfg, backend=ga_backend)
+        scoring_backend = ga_backend
+        out = run_ga(task, hw_used, objective, opts, cfg,
+                     backend=ga_backend)
         part, rd = out.partition, out.redist_mask
-        res = Evaluator(task, hw1, opts,
+        res = Evaluator(task, hw_used, opts,
                         backend=ga_backend).evaluate(part, rd)
     elif method == "miqp":
         # Solve under the paper's sync approximation (Sec. 6.3.2 adds max()
@@ -214,17 +267,19 @@ def optimize(
         # drives the lattice engine's scoring chunks.
         solve_opts = EvalOptions(redistribution=True, async_exec=False)
         opts = options or EvalOptions(redistribution=True, async_exec=True)
-        hw1 = hw.replace(diagonal_links=True)
+        hw_used = hw.replace(diagonal_links=True)
         mcfg = miqp_config or MIQPConfig()
         if backend is not None:
             mcfg = dataclasses.replace(mcfg, backend=backend)
-        out = run_miqp(task, hw1, objective, solve_opts, mcfg)
+        out = run_miqp(task, hw_used, objective, solve_opts, mcfg)
         part, rd = out.partition, out.redist_mask
-        part, rd = _polish(task, hw1, opts, part, rd, objective,
+        part, rd = _polish(task, hw_used, opts, part, rd, objective,
                            backend=scoring_backend)
-        res = Evaluator(task, hw1, opts,
+        res = Evaluator(task, hw_used, opts,
                         backend=scoring_backend).evaluate(part, rd)
     else:
         raise ValueError(f"unknown method {method!r}; one of {METHODS}")
     dt = time.perf_counter() - t0
-    return ScheduleResult(method, objective, part, rd, res, base, dt)
+    return ScheduleResult(method, objective, part, rd, res, base, dt,
+                          task=task, hw_used=hw_used, options=opts,
+                          backend=scoring_backend)

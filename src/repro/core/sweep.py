@@ -11,6 +11,11 @@ This module turns those hand-rolled Python loops into:
   * :func:`run_grid` — the timed per-point driver for work that stays
     per-point (the HiGHS ``engine="milp"`` path and other external
     solvers), with an optional per-point progress line;
+  * :class:`PipelinePoint` / :func:`pipeline_sweep` — *batched* RCPSP
+    pipelining (DESIGN.md §13): same-(n_ops, batch) points schedule
+    through one compiled ``pipelining_jax.schedule_batch`` call, with
+    method-tagged cached records (the ``engine="milp"`` refinement stays
+    per-point);
   * :func:`netsim_sweep` — *batched* flow simulation (DESIGN.md §11):
     same-mesh-shape nets run through one compiled
     ``netsim_jax.simulate_pull_batch`` call, with cached records;
@@ -29,7 +34,9 @@ This module turns those hand-rolled Python loops into:
   * a process-wide result cache keyed by content fingerprints
     (backend + task ops + HWConfig + options + partition bytes for
     evaluation records; + objective and the full solver config —
-    GAConfig or MIQPConfig, method-tagged — for solver records), so
+    GAConfig or MIQPConfig, method-tagged — for solver records;
+    segment-duration bytes + batch + the resolved PipelineConfig for
+    pipelining records), so
     repeated baselines across figure scripts — e.g.
     ``run.py`` invoking fig8 then fig9 on the same workloads — are
     evaluated once per backend (backends agree only to rtol 1e-9, so
@@ -57,11 +64,13 @@ from .workload import Partition, Task, uniform_partition
 
 __all__ = [
     "EvalPoint",
+    "PipelinePoint",
     "eval_sweep",
     "grid",
     "run_grid",
     "solve_grid",
     "netsim_sweep",
+    "pipeline_sweep",
     "clear_cache",
     "cache_stats",
 ]
@@ -85,8 +94,9 @@ def run_grid(
 ) -> list[tuple[dict, Any, float]]:
     """Timed per-point driver for sweeps whose body stays per-point —
     external-solver work such as the HiGHS ``engine="milp"`` MIQP path
-    or the pipelining ILP (batched MIQP lattice solves go through
-    :func:`solve_grid` with ``method="miqp"`` instead, DESIGN.md §12).
+    or the pipelining MILP refinement (batched MIQP lattice solves go
+    through :func:`solve_grid` with ``method="miqp"`` and pipelining
+    grids through :func:`pipeline_sweep` instead, DESIGN.md §12/§13).
     Calls ``fn(**point)`` for every point, returning
     ``(point, result, microseconds)`` triples; ``emit`` (if given) is
     invoked per point for CSV-style reporting.
@@ -376,9 +386,14 @@ def _solver_fingerprint(pt: EvalPoint, method: str, backend: str,
 
 
 def _copy_solver_record(rec):
+    import dataclasses as _dc
+
     from .ga import GAResult
     from .miqp import MIQPResult
+    from .pipelining import PipelineResult
 
+    if isinstance(rec, PipelineResult):
+        return _dc.replace(rec)      # all fields immutable scalars
     if isinstance(rec, MIQPResult):
         return MIQPResult(
             partition=rec.partition.copy(),
@@ -480,6 +495,121 @@ def solve_grid(
                 points[idxs[0]].options, objective, cfg)
             for i, out in zip(idxs, outs):
                 records[i] = out
+
+    if cache:
+        for i in todo:
+            _CACHE[fps[i]] = _copy_solver_record(records[i])
+    return records
+
+
+# ------------------------------------------------- batched pipelining
+@dataclasses.dataclass
+class PipelinePoint:
+    """One grid point of the batched RCPSP pipelining sweep
+    (DESIGN.md §13): per-op ``(name, t_in, t_comp, t_out)`` segment
+    durations for ONE sample (``EvalResult.segments()`` /
+    ``ScheduleResult.segments()``) plus the batch size to pipeline."""
+
+    segments: Sequence[tuple[str, float, float, float]]
+    batch: int
+
+    def durations(self) -> np.ndarray:
+        """``[n_ops, 3]`` float64 durations, clamped like ``build_jobs``
+        (one conversion shared with the engines, so the clamping
+        contract — and the cache fingerprint built on it — cannot
+        drift)."""
+        from .pipelining import _segment_durations
+
+        return _segment_durations(self.segments).reshape(-1, 3)
+
+
+def _pipeline_fingerprint(pt: PipelinePoint, cfg) -> tuple:
+    """Cache key for a pipelining record: method tag, the resolved
+    (frozen) :class:`~repro.core.pipelining.PipelineConfig` — engine and
+    backend included — segment-duration bytes and batch. The engines are
+    bit-identical (DESIGN.md §13), but the backend stays in the key for
+    consistency with every other record family."""
+    return ("pipeline", cfg, pt.durations().tobytes(), int(pt.batch))
+
+
+def pipeline_sweep(
+    points: Sequence[PipelinePoint],
+    cfg=None,
+    backend: str = "jax",
+    cache: bool = True,
+) -> list:
+    """Schedule every pipelining point; returns
+    :class:`~repro.core.pipelining.PipelineResult` records aligned with
+    ``points`` (DESIGN.md §13).
+
+    JAX backend: uncached points are grouped by (n_ops, batch) — the
+    chain structure is a pure function of that pair; durations are data —
+    and each group schedules through ONE compiled
+    ``pipelining_jax.schedule_batch`` call. A point's record is identical
+    whether it is scheduled alone or batched (bit-identical, the §9 cache
+    invariant). ``backend="numpy"`` runs the host frontier loop per
+    point (the parity reference); ``engine="python"``/``"milp"`` configs
+    run the serial engines per point — milp cannot batch — with records
+    still cached. A non-``"auto"`` ``cfg.backend`` wins over the
+    sweep-level ``backend`` argument (the :class:`PipelineConfig`
+    contract); ``"auto"`` resolves to jax — grid batching always wins
+    here, and the engines agree bit-for-bit, so the resolution is purely
+    a performance choice."""
+    from .pipelining import (PipelineConfig, PipelineResult,
+                             pipeline_batch, resolve_auto_pipeline_engine,
+                             sequential_makespan)
+
+    if cfg is None:
+        cfg = PipelineConfig()
+    engine = resolve_auto_pipeline_engine(cfg.engine)
+    # An explicit cfg.backend wins over the sweep-level default (the
+    # PipelineConfig contract); "auto" resolves to jax here — grid
+    # batching always wins, and the engines agree bit-for-bit, so the
+    # resolution is purely a performance choice.
+    backend = cfg.backend if cfg.backend != "auto" else backend
+    backend = "jax" if backend == "auto" else backend
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"one of ('numpy', 'jax', 'auto')")
+    if engine != "vectorized":
+        backend = "numpy"        # serial engines run on host
+    # Fingerprint the *resolved* config so auto-selected records share
+    # the cache with their concrete equivalents (the §12 rule).
+    cfg = dataclasses.replace(cfg, engine=engine, backend=backend)
+    records: list = [None] * len(points)
+    todo: list[int] = []
+    fps: list[tuple | None] = [None] * len(points)
+    for i, pt in enumerate(points):
+        if cache:
+            fp = _pipeline_fingerprint(pt, cfg)
+            fps[i] = fp
+            hit = _CACHE.get(fp)
+            if hit is not None:
+                _STATS["hits"] += 1
+                records[i] = _copy_solver_record(hit)
+                continue
+            _STATS["misses"] += 1
+        todo.append(i)
+
+    if todo and (engine != "vectorized" or backend == "numpy"):
+        for i in todo:
+            pt = points[i]
+            records[i] = pipeline_batch(pt.segments, pt.batch, config=cfg)
+    elif todo:
+        from . import pipelining_jax
+
+        groups: dict[tuple, list[int]] = {}
+        for i in todo:
+            pt = points[i]
+            groups.setdefault((len(pt.segments), int(pt.batch)),
+                              []).append(i)
+        for (n, B), idxs in groups.items():
+            durs = np.stack([points[i].durations() for i in idxs])
+            out = pipelining_jax.schedule_batch(durs, B)
+            for g, i in enumerate(idxs):
+                records[i] = PipelineResult(
+                    B, sequential_makespan(points[i].segments, B),
+                    float(out["makespan"][g]), engine="vectorized")
 
     if cache:
         for i in todo:

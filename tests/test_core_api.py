@@ -38,6 +38,36 @@ def test_speedup_property_and_pipeline():
     assert p.speedup >= 1.0
 
 
+def test_pipeline_congestion_aware_segments():
+    """ScheduleResult.segments(congestion=...) re-derives the per-op
+    durations under the requested congestion model (DESIGN.md §11/§13):
+    identical for the model the schedule was scored under, simulated
+    netsim arrival times for ``"flow"`` — and both pipeline cleanly."""
+    from repro.core import PipelineConfig
+
+    hw = make_hw("A", 4)
+    r = optimize(task(), hw, "simba")
+    assert r.segments() == r.segments(congestion="regime")
+    flow = r.segments(congestion="flow")
+    assert len(flow) == len(r.segments())
+    p_reg = r.pipeline(batch=4)
+    p_flow = r.pipeline(batch=4, congestion="flow")
+    assert p_flow.pipelined > 0 and p_flow.speedup >= 1.0
+    # engines agree on the flow-segment instance too
+    p_flow_py = r.pipeline(batch=4, congestion="flow",
+                           config=PipelineConfig(engine="python"))
+    assert p_flow.pipelined == p_flow_py.pipelined
+    assert p_reg.engine == "vectorized" and p_flow_py.engine == "python"
+    # a context-less (back-compat) result must refuse, not silently
+    # return wrong-congestion durations
+    import dataclasses
+
+    bare = dataclasses.replace(r, task=None, hw_used=None, options=None)
+    assert bare.segments() == r.segments()
+    with pytest.raises(ValueError):
+        bare.segments(congestion="flow")
+
+
 def test_unknown_method_raises():
     with pytest.raises(ValueError):
         optimize(task(), make_hw("A", 4), "magic")

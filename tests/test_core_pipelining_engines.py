@@ -1,0 +1,215 @@
+"""Pipelining engine tests (DESIGN.md §13): serial python heapq SGS vs
+the vectorized frontier SGS (numpy host reference + batched jax), the
+MILP refinement's feasibility contract, scheduler invariants as
+hypothesis properties, and the §9 solo==batched cache invariant for
+``sweep.pipeline_sweep``."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import sweep
+from repro.core.pipelining import (PipelineConfig, build_jobs,
+                                   list_schedule, milp_schedule,
+                                   pipeline_batch,
+                                   resolve_auto_pipeline_engine,
+                                   sequential_makespan,
+                                   vectorized_schedule)
+from repro.core.sweep import PipelinePoint
+
+
+def _random_segments(rng, n=None, p_zero=0.3):
+    n = int(rng.integers(1, 6)) if n is None else n
+    segs = []
+    for i in range(n):
+        durs = np.where(rng.random(3) < p_zero, 0.0, rng.uniform(0.0, 5.0, 3))
+        segs.append((f"op{i}", float(durs[0]), float(durs[1]),
+                     float(durs[2])))
+    return segs
+
+
+def _serial_starts_array(segments, batch):
+    jobs = build_jobs(segments, batch)
+    ms, starts = list_schedule(jobs)
+    L = 3 * len(segments)
+    arr = np.array([[starts[s * L + p] for p in range(L)]
+                    for s in range(batch)])
+    return ms, arr
+
+
+def _check_valid(jobs, starts, makespan):
+    byid = {j.jid: j for j in jobs}
+    for j in jobs:
+        for p in j.preds:
+            assert starts[j.jid] >= starts[p] + byid[p].dur - 1e-9
+    for res in ("comm", "comp"):
+        ivals = sorted((starts[j.jid], starts[j.jid] + j.dur)
+                       for j in jobs if j.resource == res and j.dur > 0)
+        for (s1, e1), (s2, e2) in zip(ivals, ivals[1:]):
+            assert s2 >= e1 - 1e-9
+    assert makespan >= max(starts[j.jid] + j.dur for j in jobs) - 1e-9
+
+
+# ------------------------------------------------------ engine parity
+def test_python_vs_vectorized_exact():
+    """The §13 contract is *bit-identical* makespans and starts — the
+    vectorized frontier step performs the serial SGS's exact pop
+    sequence and arithmetic, on both backends."""
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        segs = _random_segments(rng)
+        batch = int(rng.integers(1, 7))
+        ms, arr = _serial_starts_array(segs, batch)
+        for backend in ("numpy", "jax"):
+            msv, sv = vectorized_schedule(segs, batch, backend=backend)
+            assert msv == ms
+            assert np.array_equal(sv, arr)
+
+
+def test_vectorized_engine_is_auto_default():
+    assert resolve_auto_pipeline_engine("auto") == "vectorized"
+    with pytest.raises(ValueError):
+        resolve_auto_pipeline_engine("nonsense")
+    rng = np.random.default_rng(1)
+    segs = _random_segments(rng, n=3)
+    r_auto = pipeline_batch(segs, 4)
+    r_py = pipeline_batch(segs, 4, config=PipelineConfig(engine="python"))
+    assert r_auto.engine == "vectorized" and r_py.engine == "python"
+    assert r_auto.pipelined == r_py.pipelined
+
+
+def test_single_step_chains_and_degenerate_batches():
+    assert pipeline_batch([("a", 0.0, 0.0, 0.0)], 4).pipelined == 0.0
+    segs = [("a", 1.0, 2.0, 3.0)]
+    for b in (1, 2, 5):
+        ms, _ = _serial_starts_array(segs, b)
+        for backend in ("numpy", "jax"):
+            assert vectorized_schedule(segs, b, backend=backend)[0] == ms
+
+
+# ------------------------------------------- batched sweep invariants
+def test_pipeline_sweep_solo_eq_batched_mixed_shapes():
+    """One sweep over points of *different* (n_ops, batch) shapes must
+    return, per point, exactly what a solo call returns (§9 cache
+    invariant; shape groups compile separately but share nothing)."""
+    rng = np.random.default_rng(2)
+    pts = [PipelinePoint(_random_segments(rng, n=n), b)
+           for n in (1, 3, 4) for b in (2, 5)]
+    batched = sweep.pipeline_sweep(pts, cache=False)
+    for pt, rec in zip(pts, batched):
+        solo = sweep.pipeline_sweep([pt], cache=False)[0]
+        ms, _ = _serial_starts_array(pt.segments, pt.batch)
+        assert rec.pipelined == solo.pipelined == ms
+        assert rec.sequential == sequential_makespan(pt.segments, pt.batch)
+
+
+def test_pipeline_sweep_cache_and_config_isolation():
+    sweep.clear_cache()
+    try:
+        rng = np.random.default_rng(3)
+        pts = [PipelinePoint(_random_segments(rng, n=2), b) for b in (2, 3)]
+        a = sweep.pipeline_sweep(pts)
+        assert sweep.cache_stats() == {"hits": 0, "misses": len(pts)}
+        b = sweep.pipeline_sweep(pts)
+        assert sweep.cache_stats()["hits"] == len(pts)
+        assert all(x.pipelined == y.pipelined for x, y in zip(a, b))
+        # a different engine config is a different record family
+        c = sweep.pipeline_sweep(pts, PipelineConfig(engine="python"))
+        assert sweep.cache_stats()["misses"] == 2 * len(pts)
+        assert all(x.pipelined == y.pipelined for x, y in zip(a, c))
+        # numpy backend: same results, its own cache records
+        d = sweep.pipeline_sweep(pts, backend="numpy")
+        assert sweep.cache_stats()["misses"] == 3 * len(pts)
+        assert all(x.pipelined == y.pipelined for x, y in zip(a, d))
+    finally:
+        sweep.clear_cache()
+
+
+def test_pipeline_sweep_honors_config_backend(monkeypatch):
+    """An explicit ``cfg.backend="numpy"`` must take the host path even
+    though the sweep-level backend defaults to jax (the PipelineConfig
+    contract)."""
+    import repro.core.pipelining_jax as pjx
+
+    def boom(*a, **k):
+        raise AssertionError("jax path taken despite cfg.backend='numpy'")
+
+    monkeypatch.setattr(pjx, "schedule_batch", boom)
+    rng = np.random.default_rng(4)
+    pt = PipelinePoint(_random_segments(rng, n=2), 3)
+    rec = sweep.pipeline_sweep(
+        [pt], PipelineConfig(engine="vectorized", backend="numpy"),
+        cache=False)[0]
+    ms, _ = _serial_starts_array(pt.segments, pt.batch)
+    assert rec.pipelined == ms
+
+
+def test_pipeline_sweep_milp_runs_per_point():
+    segs = [("a", 1.0, 2.0, 1.0), ("b", 0.5, 1.0, 0.5)]
+    pt = PipelinePoint(segs, 3)
+    greedy, _ = list_schedule(build_jobs(segs, 3))
+    rec = sweep.pipeline_sweep(
+        [pt], PipelineConfig(engine="milp", n_buckets=24, time_limit=10),
+        cache=False)[0]
+    assert rec.engine == "milp"
+    assert rec.pipelined <= greedy + 1e-9
+
+
+# ---------------- scheduler invariants: seeded spot checks + hypothesis
+# variant via the shim (the netsim-suite pattern — the properties still
+# run when the optional `hypothesis` dev-dep is absent).
+def _check_scheduler_invariants(seed):
+    rng = np.random.default_rng(seed)
+    segs = _random_segments(rng)
+    batch = int(rng.integers(1, 6))
+    jobs = build_jobs(segs, batch)
+    ms, starts = list_schedule(jobs)
+    if jobs:
+        _check_valid(jobs, starts, ms)
+    comm = sum(j.dur for j in jobs if j.resource == "comm")
+    comp = sum(j.dur for j in jobs if j.resource == "comp")
+    assert max(comm, comp) - 1e-9 <= ms
+    assert ms <= sequential_makespan(segs, batch) + 1e-9
+    ms_next, _ = list_schedule(build_jobs(segs, batch + 1))
+    assert ms <= ms_next + 1e-9
+    for backend in ("numpy", "jax"):
+        assert vectorized_schedule(segs, batch, backend=backend)[0] == ms
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_scheduler_invariants_seeded(seed):
+    """Schedule validity, busiest-resource lower bound, sequential upper
+    bound, makespan monotone in batch, python==vectorized exact."""
+    _check_scheduler_invariants(seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_scheduler_invariants_property(seed):
+    _check_scheduler_invariants(seed)
+
+
+def _check_milp_hierarchy(seed):
+    rng = np.random.default_rng(seed)
+    segs = _random_segments(rng, n=int(rng.integers(1, 4)))
+    batch = int(rng.integers(1, 4))
+    jobs = build_jobs(segs, batch)
+    greedy, _ = list_schedule(jobs)
+    ms, starts = milp_schedule(jobs, n_buckets=16, time_limit=5)
+    assert set(starts) == {j.jid for j in jobs}
+    if jobs:
+        _check_valid(jobs, starts, ms)
+    assert ms <= greedy + 1e-9 <= sequential_makespan(segs, batch) + 2e-9
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_milp_leq_list_leq_sequential_seeded(seed):
+    """The solver hierarchy of Sec. 5.4: the (re-simulated, feasible)
+    MILP schedule never loses to the list schedule, which never loses to
+    fully sequential execution — and the MILP starts cover every job."""
+    _check_milp_hierarchy(seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_milp_leq_list_leq_sequential_property(seed):
+    _check_milp_hierarchy(seed)
