@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test smoke bench-fast bench-smoke ga-fitness ga-evolve netsim \
-	miqp-solve pipeline-schedule quickstart
+	miqp-solve pipeline-schedule opt-serve quickstart
 
 # Tier-1 verify — the command CI and the roadmap pin.
 test:
@@ -17,7 +17,8 @@ test:
 smoke:
 	$(PY) -m pytest -x -q tests/test_core_evaluator.py \
 	    tests/test_backend_parity.py tests/test_core_sweep.py \
-	    tests/test_core_api.py tests/test_core_ga_engines.py
+	    tests/test_core_api.py tests/test_core_ga_engines.py \
+	    tests/test_cache_store.py tests/test_serve_optserver.py
 	$(MAKE) bench-smoke
 
 bench-fast:
@@ -25,13 +26,15 @@ bench-fast:
 
 # Tiny-profile end-to-end benchmarks (seconds, not minutes) — smoke
 # check that the GA engines + solve_grid, the netsim backends, the
-# MIQP engines (milp/lattice parity), and the pipelining engines
-# (python/vectorized exact-parity gate) still run and write artifacts.
+# MIQP engines (milp/lattice parity), the pipelining engines
+# (python/vectorized exact-parity gate), and the optimization server
+# (solo==served bitwise parity gate) still run and write artifacts.
 bench-smoke:
 	$(PY) -m benchmarks.perf_iterations --cell ga_evolve --smoke
 	$(PY) -m benchmarks.perf_iterations --cell netsim --smoke
 	$(PY) -m benchmarks.perf_iterations --cell miqp_solve --smoke
 	$(PY) -m benchmarks.perf_iterations --cell pipeline_schedule --smoke
+	$(PY) -m benchmarks.perf_iterations --cell opt_serve --smoke
 
 # Backend shootout for the GA fitness hot loop (DESIGN.md §8).
 ga-fitness:
@@ -52,6 +55,11 @@ miqp-solve:
 # RCPSP pipelining engine shootout + exact-parity gate (DESIGN.md §13).
 pipeline-schedule:
 	$(PY) -m benchmarks.perf_iterations --cell pipeline_schedule
+
+# Optimization server: serial per-request solves vs the coalescing
+# OptServer, with a bitwise solo==served parity gate (DESIGN.md §14).
+opt-serve:
+	$(PY) -m benchmarks.perf_iterations --cell opt_serve
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -41,6 +41,14 @@ engines must agree to float64 round-off on every point, nonzero exit
 otherwise:
     PYTHONPATH=src python -m benchmarks.perf_iterations \\
         --cell pipeline_schedule
+
+The ``opt_serve`` cell benchmarks the optimization server (DESIGN.md
+§14) under mixed closed-loop traffic (evals across both congestion
+models × pipelining × GA solves): serial per-request solo sweep calls —
+what a naive one-call-per-request server would do — vs the coalescing
+``OptServer``, with a bitwise parity gate (served results must equal
+the solo results exactly, nonzero exit otherwise):
+    PYTHONPATH=src python -m benchmarks.perf_iterations --cell opt_serve
 """
 import argparse
 import json
@@ -125,7 +133,10 @@ def main():
                          "(MIQP engine shootout + exact-parity checks, "
                          "DESIGN.md §12) | pipeline_schedule (RCPSP "
                          "pipelining engine shootout + exact-parity "
-                         "gate, DESIGN.md §13)")
+                         "gate, DESIGN.md §13) | opt_serve (optimization "
+                         "server: serial per-request solves vs the "
+                         "coalescing OptServer + bitwise parity gate, "
+                         "DESIGN.md §14)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny populations/generations — the no-regression "
                          "smoke profile used by `make bench-smoke`")
@@ -144,6 +155,9 @@ def main():
         return
     if args.cell == "pipeline_schedule":
         run_pipeline_schedule(smoke=args.smoke)
+        return
+    if args.cell == "opt_serve":
+        run_opt_serve(smoke=args.smoke)
         return
     from repro.launch import dryrun  # noqa: F401 -- sets the 512-device
     from repro.launch.mesh import make_production_mesh  # XLA_FLAGS first
@@ -634,6 +648,160 @@ def run_pipeline_schedule(smoke: bool = False):
         # batched record that differs from its solo equivalent) is a
         # correctness bug — fail the smoke/CI gate loudly.
         raise SystemExit("pipeline_schedule: engine parity violated")
+
+
+def run_opt_serve(smoke: bool = False):
+    """Optimization-server shootout (DESIGN.md §14).
+
+    Replays one mixed closed-loop request trace two ways — serial
+    per-request solo sweep calls (what a naive one-call-per-request
+    server would do: ``eval_sweep([pt])`` / ``solve_grid([pt])`` /
+    ``pipeline_sweep([pt])`` per request) and the coalescing
+    :class:`~repro.serve.optserver.OptServer` (submit everything, let
+    the worker coalesce by CallKey into batched shape-grouped sweep
+    calls). Both legs run with ``cache=False`` so every request is real
+    work, and both are timed warm — the compiled executables are
+    process-cached and shared between the legs, so the measured gap is
+    pure dispatch/coalescing, not compilation.
+
+    Parity is a correctness gate, not a perf number: the served result
+    must be BITWISE identical to the solo result on every request (the
+    solo==served contract, §14) — any divergence exits nonzero (the
+    artifact still records the rows). Acceptance bar: ≥3× throughput on
+    the mixed trace. ``smoke=True`` shrinks the trace to a seconds-long
+    no-regression check (`make bench-smoke`), skips the verdict, and
+    writes ``opt_serve_smoke.json``."""
+    import numpy as np
+
+    from repro.core import EvalOptions, make_hw, sweep
+    from repro.core.ga import GAConfig
+    from repro.core.pipelining import PipelineConfig
+    from repro.core.workload import uniform_partition
+    from repro.graphs import WORKLOADS
+    from repro.serve import OptRequest, OptServer
+
+    rng = np.random.default_rng(0)
+    if smoke:
+        n_eval, n_pipe, n_solve = 20, 4, 0
+        wnames, grids = ("alexnet",), (4,)
+    else:
+        n_eval, n_pipe, n_solve = 384, 48, 8
+        wnames, grids = ("alexnet", "vit"), (4, 8)
+    tasks = [WORKLOADS[w](batch=1) for w in wnames]
+    hws = [make_hw("A", g, "hbm") for g in grids]
+    ga_cfg = GAConfig(generations=6, population=32, patience=6, seed=0)
+    pipe_cfg = PipelineConfig(engine="vectorized", backend="jax")
+
+    # -- the request trace: evals over workload × grid × congestion ×
+    #    redistribution, RCPSP pipelining instances, GA solves.
+    reqs = []
+    for i in range(n_eval):
+        task, hw = tasks[i % len(tasks)], hws[i % len(hws)]
+        # flow-congestion evals stay a minority share: the flow netsim
+        # is near-linear work batched or solo (see the netsim cell), so
+        # it measures the engine, not the serving layer
+        opts = EvalOptions(
+            redistribution=bool(i % 2), async_exec=True,
+            congestion="flow" if i % 32 == 31 else "regime")
+        part = uniform_partition(task, hw.X, hw.Y)
+        part.collectors[:] = rng.integers(0, hw.Y, len(task))
+        reqs.append(OptRequest("eval",
+                               sweep.EvalPoint(task, hw, opts, part)))
+    for i in range(n_pipe):
+        segs = [(f"op{j}", float(rng.uniform(0.1, 1.0)),
+                 float(rng.uniform(0.5, 2.0)),
+                 float(rng.uniform(0.1, 1.0))) for j in range(6)]
+        reqs.append(OptRequest("pipeline", sweep.PipelinePoint(segs, 4),
+                               cfg=pipe_cfg))
+    for i in range(n_solve):
+        # same task shape on purpose: the 8 searches coalesce into ONE
+        # island-batched vectorized GA run (DESIGN.md §10)
+        reqs.append(OptRequest(
+            "solve", sweep.EvalPoint(tasks[0], hws[i % len(hws)],
+                                     EvalOptions(redistribution=True,
+                                                 async_exec=True)),
+            method="ga", cfg=ga_cfg))
+
+    def solo_leg():
+        """The naive server: one sweep call per request, in order."""
+        out = []
+        for r in reqs:
+            if r.kind == "eval":
+                out.append(sweep.eval_sweep(
+                    [r.point], backend=r.backend, cache=False)[0])
+            elif r.kind == "solve":
+                out.append(sweep.solve_grid(
+                    [r.point], r.objective, r.cfg, backend=r.backend,
+                    cache=False, method=r.method)[0])
+            else:
+                out.append(sweep.pipeline_sweep(
+                    [r.point], r.cfg, cache=False)[0])
+        return out
+
+    def served_leg():
+        srv = OptServer(cache=False, autostart=False,
+                        max_queue=len(reqs), max_batch=len(reqs))
+        futs = [srv.submit(r) for r in reqs]
+        t0 = time.perf_counter()
+        srv.start()
+        out = [f.result(timeout=600) for f in futs]
+        dt = time.perf_counter() - t0
+        st = srv.stats()
+        srv.kill()
+        return out, dt, st
+
+    solo_leg()                                   # warm solo-shape compiles
+    served_leg()                                 # warm batched compiles
+    t0 = time.perf_counter()
+    solo = solo_leg()
+    serial_s = time.perf_counter() - t0
+    served, served_s, st = served_leg()
+
+    # -- bitwise parity gate (solo == served, §14)
+    parity_ok = True
+    for r, a, b in zip(reqs, solo, served):
+        if r.kind == "eval":
+            same = (a["latency"] == b["latency"]
+                    and a["energy"] == b["energy"]
+                    and np.array_equal(a["t_in"], b["t_in"])
+                    and np.array_equal(a["t_out"], b["t_out"]))
+        elif r.kind == "solve":
+            same = (a.objective == b.objective
+                    and np.array_equal(a.partition.Px, b.partition.Px)
+                    and np.array_equal(a.partition.Py, b.partition.Py))
+        else:
+            same = (a.sequential == b.sequential
+                    and a.pipelined == b.pipelined)
+        parity_ok &= same
+
+    speedup = serial_s / served_s
+    print(f"[perf] opt_serve trace={len(reqs)} requests "
+          f"(eval={n_eval} pipeline={n_pipe} solve={n_solve}): "
+          f"serial={serial_s:.2f}s served={served_s:.2f}s "
+          f"speedup={speedup:.2f}x | coalesce "
+          f"{st['coalesce_factor']:.1f}x over {st['batches']} calls | "
+          f"p99={st['p99_ms']:.0f}ms | "
+          f"parity={'OK' if parity_ok else 'FAIL'}")
+    out = {"requests": len(reqs), "eval": n_eval, "pipeline": n_pipe,
+           "solve": n_solve, "serial_s": serial_s, "served_s": served_s,
+           "speedup": speedup, "batches": st["batches"],
+           "coalesce_factor": st["coalesce_factor"],
+           "p50_ms": st["p50_ms"], "p99_ms": st["p99_ms"],
+           "requests_per_s": st["requests_per_s"],
+           "parity_ok": parity_ok}
+    if not smoke:
+        ok = speedup >= 3.0 and parity_ok
+        out["verdict"] = ("confirmed (>=3x served, solo==served bitwise)"
+                          if ok else "refuted")
+        print(f"[perf] opt_serve -> {out['verdict']}")
+    os.makedirs(ART, exist_ok=True)
+    name = "opt_serve_smoke.json" if smoke else "opt_serve.json"
+    with open(os.path.join(ART, name), "w") as f:
+        json.dump(out, f, indent=1)
+    if not parity_ok:
+        # A served result that differs from its solo equivalent breaks
+        # the §14 contract — fail the smoke/CI gate loudly.
+        raise SystemExit("opt_serve: served result != solo result")
 
 
 def run_smollm(mesh):

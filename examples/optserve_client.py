@@ -1,0 +1,91 @@
+"""Optimization-server client walkthrough (DESIGN.md §14): submit mixed
+co-optimization traffic — evaluations, a GA solve, pipelining — to an
+in-process :class:`OptServer`, stream the futures back, then restart
+against the same store to show warm-cache serving. Includes the asyncio
+submission path.
+
+    PYTHONPATH=src python examples/optserve_client.py
+"""
+import asyncio
+import tempfile
+
+from repro.core import EvalOptions, make_hw, sweep
+from repro.core.ga import GAConfig
+from repro.core.workload import uniform_partition
+from repro.graphs import alexnet_task, vit_task
+from repro.serve import OptRequest, OptServer
+
+
+def build_requests():
+    hw = make_hw("A", grid=4, memory="hbm")
+    reqs = []
+    for task in (alexnet_task(batch=1), vit_task(batch=1)):
+        part = uniform_partition(task, hw.X, hw.Y)
+        for cong in ("regime", "flow"):
+            reqs.append(OptRequest(
+                "eval",
+                sweep.EvalPoint(task, hw, EvalOptions(congestion=cong),
+                                part)))
+    reqs.append(OptRequest(
+        "solve", sweep.EvalPoint(alexnet_task(batch=1), hw),
+        objective="latency", method="ga",
+        cfg=GAConfig(generations=10, population=32, seed=0)))
+    reqs.append(OptRequest(
+        "pipeline",
+        sweep.PipelinePoint([("conv", 0.4, 1.2, 0.4),
+                             ("mlp", 0.2, 0.9, 0.3),
+                             ("head", 0.1, 0.5, 0.2)], batch=8)))
+    return reqs
+
+
+def show(req, res):
+    if req.kind == "eval":
+        print(f"  eval     {req.point.task.name:<10} "
+              f"congestion={req.point.options.congestion:<7} "
+              f"latency={res['latency'] * 1e6:9.1f} us")
+    elif req.kind == "solve":
+        print(f"  solve/ga {req.point.task.name:<10} "
+              f"objective={res.objective:.4e} "
+              f"({res.evaluations} evaluations)")
+    else:
+        print(f"  pipeline batch={res.batch} "
+              f"sequential={res.sequential:.2f} "
+              f"pipelined={res.pipelined:.2f} "
+              f"({res.sequential / res.pipelined:.2f}x)")
+
+
+def main():
+    store = tempfile.mktemp(suffix=".bin", prefix="optserve-cache-")
+    reqs = build_requests()
+
+    # ---- cold server: everything is computed, coalesced by CallKey
+    srv = OptServer(store_path=store)
+    futs = [srv.submit(r) for r in reqs]       # returns immediately
+    for r, f in zip(reqs, futs):
+        show(r, f.result())                    # stream results back
+    st = srv.stats()
+    print(f"cold:  {st['completed']} requests, "
+          f"coalesce {st['coalesce_factor']:.1f}x over "
+          f"{st['batches']} sweep calls, cache hit-rate "
+          f"{st['cache_hit_rate'] * 100:.0f}%")
+    srv.close()                                # full-save (atomic) store
+
+    # ---- warm restart: same requests served from the persisted cache
+    sweep.clear_cache()                        # simulate a new process
+    srv = OptServer(store_path=store)
+    print(f"store: restored {srv.store_info['loaded']} entries")
+
+    async def client():
+        outs = await asyncio.gather(
+            *(srv.submit_async(r) for r in build_requests()))
+        return outs
+
+    asyncio.run(client())
+    st = srv.stats()
+    print(f"warm:  {st['completed']} requests, cache hit-rate "
+          f"{st['cache_hit_rate'] * 100:.0f}%, p99 {st['p99_ms']:.1f}ms")
+    srv.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -104,6 +104,19 @@ class HWConfig:
     def topology(self) -> "Topology":
         return Topology(self)
 
+    # Pickle only the declared fields: the default protocol would drag
+    # the cached ``topology`` (hop matrices, flow nets) along, bloating
+    # the on-disk sweep-cache store (repro.serve.cache_store) — and the
+    # unpickled copy must hash/compare equal to a fresh HWConfig, which
+    # field-only state guarantees.
+    def __getstate__(self):
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    def __setstate__(self, state):
+        for k, v in state.items():
+            object.__setattr__(self, k, v)
+
     def replace(self, **kw) -> "HWConfig":
         return dataclasses.replace(self, **kw)
 

@@ -73,6 +73,8 @@ __all__ = [
     "pipeline_sweep",
     "clear_cache",
     "cache_stats",
+    "export_cache",
+    "import_cache",
 ]
 
 
@@ -180,6 +182,40 @@ def clear_cache() -> None:
 
 def cache_stats() -> dict[str, int]:
     return dict(_STATS)
+
+
+def _copy_cache_value(value):
+    """Copy-by-value for any record family the cache holds: evaluation /
+    netsim records are plain dicts (numpy arrays copied), solver records
+    are ``GAResult``/``MIQPResult``/``PipelineResult`` dataclasses."""
+    if isinstance(value, dict):
+        return _copy_record(value)
+    return _copy_solver_record(value)
+
+
+def export_cache() -> dict[tuple, Any]:
+    """Snapshot the process-wide result cache as ``{fingerprint: record}``
+    (records copied by value — mutating the snapshot cannot poison the
+    cache). The fingerprints are the exact §9/§10/§12/§13 cache keys, so
+    a snapshot can be persisted and re-imported in another process
+    (:mod:`repro.serve.cache_store`) without weakening the
+    solo==batched contract: a key either matches exactly or misses."""
+    return {k: _copy_cache_value(v) for k, v in _CACHE.items()}
+
+
+def import_cache(entries: dict, replace: bool = False) -> int:
+    """Merge ``{fingerprint: record}`` entries (an :func:`export_cache`
+    snapshot, possibly from another process via the on-disk store) into
+    the process-wide cache; returns the number of entries inserted.
+    Existing keys win unless ``replace=True`` — records are exact, so a
+    collision is by construction the same result and keeping the
+    resident copy is the cheaper choice."""
+    n = 0
+    for k, v in entries.items():
+        if replace or k not in _CACHE:
+            _CACHE[k] = _copy_cache_value(v)
+            n += 1
+    return n
 
 
 def _record(point: EvalPoint, out: dict[str, np.ndarray], i: int | tuple

@@ -1,0 +1,95 @@
+"""ServeEngine regression tests: wave-split equivalence, slot-refill
+ordering, and temperature semantics (greedy determinism + seeded
+sampling reproducibility)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.serve import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("smollm-360m", reduced=True)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lengths]
+
+
+def test_wave_split_matches_single_wave(model):
+    """len(prompts) > B runs in waves; the result must equal serving
+    each wave through its own generate() call (greedy decode is
+    stateless across waves)."""
+    cfg, params = model
+    eng = ServeEngine(cfg, params, batch_size=2, capacity=64)
+    prompts = _prompts(cfg, (5, 9, 3, 7, 4))
+    full = eng.generate(prompts, max_new_tokens=6)
+    assert len(full) == 5
+    by_wave = []
+    for i in range(0, len(prompts), 2):
+        by_wave.extend(eng.generate(prompts[i: i + 2], max_new_tokens=6))
+    assert full == by_wave
+
+
+def test_wave_split_invariant_to_batch_size(model):
+    """Greedy outputs must not depend on how prompts are grouped into
+    waves — but padding within a wave is shared, so compare engines
+    where wave boundaries differ yet co-batched prompts have equal
+    length."""
+    cfg, params = model
+    prompts = _prompts(cfg, (6, 6, 6, 6))
+    outs = {}
+    for B in (1, 2, 4):
+        eng = ServeEngine(cfg, params, batch_size=B, capacity=64)
+        outs[B] = eng.generate(prompts, max_new_tokens=5)
+    assert outs[1] == outs[2] == outs[4]
+
+
+def test_slot_refill_ordering(model):
+    """Identical prompts occupying the same slot in different waves must
+    produce identical outputs, and results come back in submission
+    order ([a, b, a, b] → outs[0]==outs[2], outs[1]==outs[3])."""
+    cfg, params = model
+    eng = ServeEngine(cfg, params, batch_size=2, capacity=64)
+    a, b = _prompts(cfg, (5, 8))
+    outs = eng.generate([a, b, a, b], max_new_tokens=6)
+    assert len(outs) == 4
+    assert outs[0] == outs[2]
+    assert outs[1] == outs[3]
+    assert outs[0] != outs[1]        # distinct prompts actually differ
+
+
+def test_greedy_temperature_zero_deterministic(model):
+    cfg, params = model
+    prompts = _prompts(cfg, (5, 3))
+    runs = [ServeEngine(cfg, params, batch_size=2, capacity=64,
+                        temperature=0.0, seed=s).generate(prompts, 6)
+            for s in (0, 7)]
+    # temperature=0 ignores the sampling seed entirely
+    assert runs[0] == runs[1]
+
+
+def test_temperature_sampling_seed_reproducible(model):
+    cfg, params = model
+    prompts = _prompts(cfg, (5, 3))
+    gen = lambda seed: ServeEngine(
+        cfg, params, batch_size=2, capacity=64,
+        temperature=0.8, seed=seed).generate(prompts, 8)
+    assert gen(3) == gen(3)          # same seed → identical stream
+    assert gen(3) != gen(4)          # different seed → diverges
+
+
+def test_outputs_in_vocab_range(model):
+    cfg, params = model
+    eng = ServeEngine(cfg, params, batch_size=3, capacity=64,
+                      temperature=0.5, seed=1)
+    outs = eng.generate(_prompts(cfg, (4, 2, 6, 3)), max_new_tokens=4)
+    assert all(len(o) == 4 for o in outs)
+    assert all(0 <= t < cfg.vocab_size for o in outs for t in o)

@@ -170,6 +170,27 @@ def test_straggler_monitor():
     assert mon.ewma == pytest.approx(1.0)
 
 
+def test_straggler_cold_start():
+    """Cold-start contract: an outlier FIRST observation (the
+    jit-compile-on-step-0 case) seeds the EWMA only provisionally — the
+    next steady observation flags it retroactively and rebases the
+    baseline, instead of folding the outlier in permanently."""
+    mon = StragglerMonitor(threshold=2.0, alpha=0.1)
+    assert not mon.observe(0, 10.0)      # no baseline yet: never flags
+    assert not mon.observe(1, 1.0)       # steady step exposes the seed
+    assert mon.flagged == [(0, 10.0)]    # …which is flagged retroactively
+    assert mon.ewma == pytest.approx(1.0)   # rebased, NOT 0.9*10 + 0.1*1
+    assert mon.observe(2, 5.0)           # later stragglers now visible
+    assert mon.flagged == [(0, 10.0), (2, 5.0)]
+
+    # A steady seed confirmed by a peer behaves exactly as before.
+    mon2 = StragglerMonitor(threshold=2.0, alpha=0.1)
+    assert not mon2.observe(0, 1.0)
+    assert not mon2.observe(1, 1.1)
+    assert mon2.flagged == []
+    assert mon2.ewma == pytest.approx(0.9 * 1.0 + 0.1 * 1.1)
+
+
 # ------------------------------------------------------ grad compression
 def test_int8_quantization_roundtrip():
     x = jax.random.normal(KEY, (256,)) * 3.0
