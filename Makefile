@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test smoke bench-fast bench-smoke ga-fitness ga-evolve netsim \
-	miqp-solve pipeline-schedule opt-serve quickstart
+	miqp-solve pipeline-schedule opt-serve sweep-shard quickstart
 
 # Tier-1 verify — the command CI and the roadmap pin.
 test:
@@ -18,7 +18,8 @@ smoke:
 	$(PY) -m pytest -x -q tests/test_core_evaluator.py \
 	    tests/test_backend_parity.py tests/test_core_sweep.py \
 	    tests/test_core_api.py tests/test_core_ga_engines.py \
-	    tests/test_cache_store.py tests/test_serve_optserver.py
+	    tests/test_cache_store.py tests/test_serve_optserver.py \
+	    tests/test_sweep_checkpoint.py
 	$(MAKE) bench-smoke
 
 bench-fast:
@@ -27,14 +28,17 @@ bench-fast:
 # Tiny-profile end-to-end benchmarks (seconds, not minutes) — smoke
 # check that the GA engines + solve_grid, the netsim backends, the
 # MIQP engines (milp/lattice parity), the pipelining engines
-# (python/vectorized exact-parity gate), and the optimization server
-# (solo==served bitwise parity gate) still run and write artifacts.
+# (python/vectorized exact-parity gate), the optimization server
+# (solo==served bitwise parity gate), and the sharded sweep fabric
+# (single==sharded bitwise parity gate on 8 forced virtual devices)
+# still run and write artifacts.
 bench-smoke:
 	$(PY) -m benchmarks.perf_iterations --cell ga_evolve --smoke
 	$(PY) -m benchmarks.perf_iterations --cell netsim --smoke
 	$(PY) -m benchmarks.perf_iterations --cell miqp_solve --smoke
 	$(PY) -m benchmarks.perf_iterations --cell pipeline_schedule --smoke
 	$(PY) -m benchmarks.perf_iterations --cell opt_serve --smoke
+	$(PY) -m benchmarks.perf_iterations --cell sweep_shard --smoke
 
 # Backend shootout for the GA fitness hot loop (DESIGN.md §8).
 ga-fitness:
@@ -60,6 +64,14 @@ pipeline-schedule:
 # OptServer, with a bitwise solo==served parity gate (DESIGN.md §14).
 opt-serve:
 	$(PY) -m benchmarks.perf_iterations --cell opt_serve
+
+# Sharded sweep fabric: single-device vs shard_map sweeps over 8 forced
+# virtual devices, with a bitwise single==sharded parity gate
+# (DESIGN.md §15). Override the count: make sweep-shard DEVICES=16.
+DEVICES ?= 8
+sweep-shard:
+	$(PY) -m benchmarks.perf_iterations --cell sweep_shard \
+	    --devices $(DEVICES)
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -8,6 +8,45 @@ import time
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 os.makedirs(ART, exist_ok=True)
 
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int) -> int:
+    """Carve the host CPU into ``n`` virtual XLA devices by setting
+    ``XLA_FLAGS`` — **must run before the first jax import** (the flag
+    is read once at backend initialization). An explicit
+    ``--xla_force_host_platform_device_count`` already present in the
+    environment wins (so CI matrix legs can pin the count); returns the
+    device count that will be in effect."""
+    existing = os.environ.get("XLA_FLAGS", "")
+    if _FORCE_FLAG in existing:
+        for tok in existing.split():
+            if tok.startswith(_FORCE_FLAG + "="):
+                return int(tok.split("=", 1)[1])
+        return int(n)
+    os.environ["XLA_FLAGS"] = (f"{_FORCE_FLAG}={int(n)} " + existing).strip()
+    return int(n)
+
+
+def apply_devices_flag(argv=None, default: int | None = None) -> int | None:
+    """Pre-parse ``--devices N`` / ``--devices=N`` from ``argv`` (or
+    ``sys.argv``) and apply :func:`force_host_devices` — call before any
+    jax import so benchmark CLIs can vary the virtual device count.
+    Returns the applied count, or ``None`` when no flag and no default.
+    The argument is left in ``argv`` for the real argparse pass."""
+    import sys
+
+    argv = sys.argv[1:] if argv is None else list(argv)
+    n = default
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            n = int(argv[i + 1])
+        elif a.startswith("--devices="):
+            n = int(a.split("=", 1)[1])
+    if n is None:
+        return None
+    return force_host_devices(n)
+
 _ROWS: list[tuple[str, float, str]] = []
 
 

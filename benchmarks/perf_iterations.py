@@ -49,11 +49,32 @@ what a naive one-call-per-request server would do — vs the coalescing
 ``OptServer``, with a bitwise parity gate (served results must equal
 the solo results exactly, nonzero exit otherwise):
     PYTHONPATH=src python -m benchmarks.perf_iterations --cell opt_serve
+
+The ``sweep_shard`` cell benchmarks the sharded sweep fabric (DESIGN.md
+§15) on forced virtual host devices: single-device sweeps vs
+``devices="sharded"`` shard_map execution over a flow-congestion eval
+grid and an island-GA solve grid, with a bitwise parity gate — sharded
+results must equal single-device results exactly, nonzero exit
+otherwise. The ``--devices N`` flag (valid for any cell) carves the
+host into N virtual XLA devices before jax initializes; sweep_shard
+defaults to 8:
+    PYTHONPATH=src python -m benchmarks.perf_iterations \\
+        --cell sweep_shard --devices 8
 """
 import argparse
 import json
 import os
+import sys
 import time
+
+# --devices must be applied BEFORE the first jax import: XLA reads the
+# host-device-count flag once at backend init. The sweep_shard cell
+# defaults to 8 virtual devices so the fabric has something to shard
+# over; every other cell keeps the real topology unless asked.
+from .common import apply_devices_flag
+
+apply_devices_flag(
+    default=8 if any("sweep_shard" in a for a in sys.argv) else None)
 
 from jax.sharding import PartitionSpec as P
 
@@ -136,10 +157,16 @@ def main():
                          "gate, DESIGN.md §13) | opt_serve (optimization "
                          "server: serial per-request solves vs the "
                          "coalescing OptServer + bitwise parity gate, "
-                         "DESIGN.md §14)")
+                         "DESIGN.md §14) | sweep_shard (sharded sweep "
+                         "fabric: single-device vs shard_map sweeps + "
+                         "bitwise parity gate, DESIGN.md §15)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny populations/generations — the no-regression "
                          "smoke profile used by `make bench-smoke`")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="carve the host into N virtual XLA devices "
+                         "(applied before jax init; sweep_shard "
+                         "defaults to 8)")
     args = ap.parse_args()
     if args.cell == "ga_fitness":
         run_ga_fitness()     # no device mesh needed
@@ -158,6 +185,9 @@ def main():
         return
     if args.cell == "opt_serve":
         run_opt_serve(smoke=args.smoke)
+        return
+    if args.cell == "sweep_shard":
+        run_sweep_shard(smoke=args.smoke)
         return
     from repro.launch import dryrun  # noqa: F401 -- sets the 512-device
     from repro.launch.mesh import make_production_mesh  # XLA_FLAGS first
@@ -802,6 +832,127 @@ def run_opt_serve(smoke: bool = False):
         # A served result that differs from its solo equivalent breaks
         # the §14 contract — fail the smoke/CI gate loudly.
         raise SystemExit("opt_serve: served result != solo result")
+
+
+def run_sweep_shard(smoke: bool = False):
+    """Sharded sweep fabric shootout (DESIGN.md §15).
+
+    Runs the same two sweep legs once per device mode, ``cache=False``
+    so every point is real work, warm-timed (executables are compiled
+    before the measured passes, so the gap is execution, not tracing):
+
+    * **eval leg** — a flow-congestion evaluation grid (the costliest
+      §8 mode: per-point ``lax.while_loop`` event simulation whose
+      iteration count varies with the memory-collector placement).
+      Sharding splits the grid axis across devices, and each shard's
+      lockstep ``vmap(while_loop)`` runs only as long as its *local*
+      slowest point — a real algorithmic win on top of parallelism.
+    * **solve leg** — island-batched GA searches over bandwidth-scaled
+      hardware variants (one ``jit(vmap(scan))`` call, §10); sharding
+      splits the island axis.
+
+    Parity is a correctness gate, not a perf number: every sharded
+    record must be BITWISE identical to its single-device record (the
+    solo == batched == sharded contract, §15) — any divergence exits
+    nonzero (the artifact still records the rows). Acceptance bar:
+    ≥2x end-to-end on ≥8 devices — evaluated against *physical* cores
+    as well: the artifact records ``physical_cores`` because N virtual
+    XLA devices carved from one core time-slice it, so wall-clock gains
+    require real cores to back the shards. ``smoke=True`` shrinks both
+    grids to a seconds-long no-regression check (`make bench-smoke`),
+    skips the verdict, and writes ``sweep_shard_smoke.json``."""
+    import numpy as np
+
+    import jax
+
+    from repro.core import EvalOptions, make_hw, sweep
+    from repro.core.ga import GAConfig
+    from repro.core.workload import uniform_partition
+    from repro.graphs import WORKLOADS
+
+    n_dev = jax.device_count()
+    cores = os.cpu_count() or 1
+    rng = np.random.default_rng(0)
+    if smoke:
+        n_eval, n_solve = 16, 4
+        ga_cfg = GAConfig(generations=3, population=16, patience=3,
+                          seed=0)
+    else:
+        n_eval, n_solve = 128, 16
+        ga_cfg = GAConfig(generations=8, population=64, patience=8,
+                          seed=0)
+
+    task = WORKLOADS["alexnet"](batch=1)
+    hw = make_hw("A", 4, "hbm")
+    eval_pts = []
+    for i in range(n_eval):
+        opts = EvalOptions(congestion="flow", async_exec=True,
+                           redistribution=bool(i % 2))
+        part = uniform_partition(task, hw.X, hw.Y)
+        part.collectors[:] = rng.integers(0, hw.Y, len(task))
+        eval_pts.append(sweep.EvalPoint(task, hw, opts, part))
+    # same task shape on purpose: the searches batch as islands of ONE
+    # compiled GA call whose island axis is what sharding splits
+    solve_hws = [make_hw("A", 4, "hbm", bw_nop=32.0 * (1 + 0.25 * i))
+                 for i in range(n_solve)]
+    solve_pts = [sweep.EvalPoint(task, h,
+                                 EvalOptions(redistribution=True,
+                                             async_exec=True))
+                 for h in solve_hws]
+
+    def legs(devices):
+        ev = sweep.eval_sweep(eval_pts, cache=False, devices=devices)
+        ga = sweep.solve_grid(solve_pts, "latency", ga_cfg, cache=False,
+                              devices=devices)
+        return ev, ga
+
+    times = {}
+    results = {}
+    for mode in ("single", "sharded"):
+        legs(mode)                                # warm the executables
+        t0 = time.perf_counter()
+        results[mode] = legs(mode)
+        times[mode] = time.perf_counter() - t0
+
+    # -- bitwise parity gate (single == sharded, §15)
+    parity_ok = True
+    for a, b in zip(results["single"][0], results["sharded"][0]):
+        parity_ok &= (a["latency"] == b["latency"]
+                      and a["energy"] == b["energy"]
+                      and np.array_equal(a["t_in"], b["t_in"])
+                      and np.array_equal(a["t_out"], b["t_out"]))
+    for a, b in zip(results["single"][1], results["sharded"][1]):
+        parity_ok &= (a.objective == b.objective
+                      and np.array_equal(a.partition.Px, b.partition.Px)
+                      and np.array_equal(a.partition.Py, b.partition.Py)
+                      and np.array_equal(a.history, b.history))
+
+    speedup = times["single"] / times["sharded"]
+    print(f"[perf] sweep_shard devices={n_dev} (physical cores={cores}) "
+          f"grid: eval={n_eval} flow points, solve={n_solve} GA islands "
+          f"| single={times['single']:.2f}s "
+          f"sharded={times['sharded']:.2f}s speedup={speedup:.2f}x | "
+          f"parity={'OK' if parity_ok else 'FAIL'}")
+    out = {"n_devices": n_dev, "physical_cores": cores,
+           "eval_points": n_eval, "solve_points": n_solve,
+           "single_s": times["single"], "sharded_s": times["sharded"],
+           "speedup": speedup, "parity_ok": parity_ok}
+    if not smoke:
+        ok = speedup >= 2.0 and parity_ok
+        out["verdict"] = ("confirmed (>=2x sharded end-to-end, "
+                          "single==sharded bitwise)" if ok else
+                          ("refuted (virtual devices share "
+                           f"{cores} physical core(s))"
+                           if parity_ok and cores < 2 else "refuted"))
+        print(f"[perf] sweep_shard -> {out['verdict']}")
+    os.makedirs(ART, exist_ok=True)
+    name = "sweep_shard_smoke.json" if smoke else "sweep_shard.json"
+    with open(os.path.join(ART, name), "w") as f:
+        json.dump(out, f, indent=1)
+    if not parity_ok:
+        # A sharded result that differs from its single-device result
+        # breaks the §15 contract — fail the smoke/CI gate loudly.
+        raise SystemExit("sweep_shard: sharded result != single result")
 
 
 def run_smollm(mesh):

@@ -294,18 +294,28 @@ def population_fn(redistribution: bool, async_exec: bool, energy_mode: str,
 
 
 @functools.lru_cache(maxsize=None)
-def grid_fn(redistribution: bool, async_exec: bool, energy_mode: str,
-            congestion: str = "regime"):
-    """Grid×population form for the sweep engine: consts stacked on a
-    leading grid axis, genomes shaped [G,P,...]; one compiled call per
-    shape signature covers the whole grid group."""
+def _grid_inner(redistribution: bool, async_exec: bool, energy_mode: str,
+                congestion: str = "regime"):
+    """Unjitted grid×population function — the shard_map target of the
+    sharded sweep fabric (DESIGN.md §15). Cached so the sharded wrapper
+    in :mod:`repro.core.sweep_shard` keys its jit cache on a stable
+    function identity."""
     single = functools.partial(
         _eval_single, redistribution=redistribution,
         async_exec=async_exec, energy_mode=energy_mode,
         congestion=congestion)
     over_pop = jax.vmap(single, in_axes=(None, 0, 0, 0, 0))
-    over_grid = jax.vmap(over_pop, in_axes=(0, 0, 0, 0, 0))
-    return jax.jit(over_grid)
+    return jax.vmap(over_pop, in_axes=(0, 0, 0, 0, 0))
+
+
+@functools.lru_cache(maxsize=None)
+def grid_fn(redistribution: bool, async_exec: bool, energy_mode: str,
+            congestion: str = "regime"):
+    """Grid×population form for the sweep engine: consts stacked on a
+    leading grid axis, genomes shaped [G,P,...]; one compiled call per
+    shape signature covers the whole grid group."""
+    return jax.jit(_grid_inner(redistribution, async_exec, energy_mode,
+                               congestion))
 
 
 def _run_x64(fn, consts: EvalConsts, Px, Py, collectors, redist
@@ -330,8 +340,22 @@ def batch_evaluate(consts: EvalConsts, opts: EvalOptions,
 
 
 def grid_evaluate(consts_stack: EvalConsts, opts: EvalOptions,
-                  Px, Py, collectors, redist) -> dict[str, np.ndarray]:
+                  Px, Py, collectors, redist,
+                  devices: str = "single") -> dict[str, np.ndarray]:
     """Grid-batched evaluation: every array carries a leading grid axis
-    (consts [G,...], genomes [G,P,...]); used by :mod:`repro.core.sweep`."""
-    return _run_x64(grid_fn(*_static_key(opts)),
-                    consts_stack, Px, Py, collectors, redist)
+    (consts [G,...], genomes [G,P,...]); used by :mod:`repro.core.sweep`.
+
+    ``devices`` (DESIGN.md §15) shards the grid axis across local
+    devices via :mod:`repro.core.sweep_shard`; outputs are bitwise
+    identical to the single-device call."""
+    G = int(np.shape(Px)[0])
+    fn = grid_fn(*_static_key(opts))
+    from . import sweep_shard
+
+    if sweep_shard.resolve_devices(devices, G) == "sharded":
+        inner = _grid_inner(*_static_key(opts))
+
+        def fn(*args):
+            return sweep_shard.sharded_grid_call(
+                inner, args, (True,) * 5, G)
+    return _run_x64(fn, consts_stack, Px, Py, collectors, redist)

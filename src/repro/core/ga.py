@@ -73,6 +73,10 @@ class GAConfig:
                                  # the measured crossover point; DESIGN.md §8)
     engine: str = "python"       # evolution engine: "python" | "vectorized"
                                  # (DESIGN.md §10)
+    devices: str = "auto"        # island-axis execution for batched jax
+                                 # solves: "single" | "sharded" | "auto"
+                                 # (DESIGN.md §15; result-neutral — never
+                                 # part of a cache fingerprint)
 
 
 @dataclasses.dataclass

@@ -98,10 +98,11 @@ def _move_units(u, P_, unit, lo, hi, active):
 
 
 @functools.lru_cache(maxsize=None)
-def _chunk_fn(elite: int, tournament: int, freeze_redist: bool,
-              objective: str, redistribution: bool, async_exec: bool,
-              energy_mode: str, congestion: str = "regime"):
-    """One compiled ``vmap(scan(generation-step))`` per static signature.
+def _chunk_inner(elite: int, tournament: int, freeze_redist: bool,
+                 objective: str, redistribution: bool, async_exec: bool,
+                 energy_mode: str, congestion: str = "regime"):
+    """Unjitted ``vmap(scan(generation-step))`` per static signature —
+    the shard_map target of the sharded sweep fabric (DESIGN.md §15).
 
     Call as ``fn(consts, win, hp, carry, keys)`` with consts/win/carry
     stacked on a leading island axis and ``keys [L, 2]`` shared across
@@ -192,7 +193,18 @@ def _chunk_fn(elite: int, tournament: int, freeze_redist: bool,
             return step(consts, win, hp, c, k)
         return lax.scan(body, carry, keys)
 
-    return jax.jit(jax.vmap(chunk, in_axes=(0, 0, None, 0, None)))
+    return jax.vmap(chunk, in_axes=(0, 0, None, 0, None))
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_fn(elite: int, tournament: int, freeze_redist: bool,
+              objective: str, redistribution: bool, async_exec: bool,
+              energy_mode: str, congestion: str = "regime"):
+    """One compiled ``vmap(scan(generation-step))`` per static
+    signature — the single-device form of :func:`_chunk_inner`."""
+    return jax.jit(_chunk_inner(elite, tournament, freeze_redist,
+                                objective, redistribution, async_exec,
+                                energy_mode, congestion))
 
 
 def solve_islands(
@@ -201,12 +213,21 @@ def solve_islands(
     options: EvalOptions,
     objective: str,
     cfg,
+    devices: str | None = None,
 ) -> list:
     """Evolve one GA search per (task, hw) island through a single
     compiled call. All islands must share a shape signature (n_ops, X, Y,
     n_entrances) — :func:`repro.core.sweep.solve_grid` does the grouping.
     Returns one :class:`repro.core.ga.GAResult` per island, aligned with
-    the inputs."""
+    the inputs.
+
+    ``devices`` (default: ``cfg.devices``, DESIGN.md §15) shards the
+    island axis across local devices: consts/window/carry shard, the
+    hyperparams and the per-generation keys replicate (keys are shared
+    across islands by construction, so a shard sees exactly the draws a
+    solo run would). Results are bitwise identical to the single-device
+    path."""
+    from . import sweep_shard
     from .ga import GAResult, _random_population_vec
 
     if objective not in OBJECTIVES:
@@ -241,10 +262,25 @@ def solve_islands(
         "p_mutate_redist": float(cfg.p_mutate_redist),
         "patience": int(cfg.patience),
     }
-    fn = _chunk_fn(elite, int(cfg.tournament), bool(cfg.freeze_redist),
-                   objective, bool(options.redistribution),
-                   bool(options.async_exec), options.energy_mode,
-                   options.congestion)
+    statics = (elite, int(cfg.tournament), bool(cfg.freeze_redist),
+               objective, bool(options.redistribution),
+               bool(options.async_exec), options.energy_mode,
+               options.congestion)
+    if devices is None:
+        devices = getattr(cfg, "devices", "single")
+    if sweep_shard.resolve_devices(devices, G) == "sharded":
+        inner = _chunk_inner(*statics)
+
+        def fn(consts, win, hp, carry, keys):
+            # Padding replicates island 0 each chunk: a padded lane
+            # evolves exactly like island 0 (same consts, same shared
+            # keys), so chunk count and every real island's carry match
+            # the single-device run bit-for-bit.
+            return sweep_shard.sharded_grid_call(
+                inner, (consts, win, hp, carry, keys),
+                (True, True, False, True, False), G)
+    else:
+        fn = _chunk_fn(*statics)
 
     n = len(tasks[0])
     X, Y = hws[0].X, hws[0].Y

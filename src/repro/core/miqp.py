@@ -118,6 +118,10 @@ class MIQPConfig:
     max_axis_candidates: int = 512   # per-op per-axis enumeration cap
     max_layer_candidates: int = 1024  # per-op (rows × cols) cap
     score_chunk: int = 2048       # fixed scoring-chunk shape (compile key)
+    devices: str = "auto"         # grid-axis execution of the chunked
+                                  # scoring calls: "single" | "sharded" |
+                                  # "auto" (DESIGN.md §15; result-neutral —
+                                  # never part of a cache fingerprint)
 
 
 @dataclasses.dataclass

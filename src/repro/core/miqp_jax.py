@@ -325,12 +325,14 @@ class _GroupScorer:
     every call)."""
 
     def __init__(self, tasks, hws, spaces, options: EvalOptions,
-                 objective: str, backend: str, chunk: int):
+                 objective: str, backend: str, chunk: int,
+                 devices: str = "single"):
         self.spaces = spaces
         self.options = options
         self.objective = objective
         self.backend = backend
         self.chunk = chunk
+        self.devices = devices
         self.evals = 0
         self.evs = [Evaluator(t, h, options, backend="numpy")
                     for t, h in zip(tasks, hws)]
@@ -355,7 +357,8 @@ class _GroupScorer:
             from . import evaluator_jax
 
             vals = evaluator_jax.grid_evaluate(
-                self._stacked, self.options, Px, Py, co, rd
+                self._stacked, self.options, Px, Py, co, rd,
+                devices=self.devices,
             )[self.objective]
         else:
             vals = np.stack([
@@ -727,7 +730,8 @@ def solve_lattice_batch(
                 sp.recap(cap)
         scorer = _GroupScorer([tasks[g] for g in idxs],
                               [hws[g] for g in idxs], sub, options,
-                              objective, backend, cfg.score_chunk)
+                              objective, backend, cfg.score_chunk,
+                              devices=getattr(cfg, "devices", "single"))
         if mode == "exact":
             best_a, best = _solve_exact(sub, scorer)
         else:

@@ -117,23 +117,43 @@ def waterfill_times(cap, inc, message_bytes):
 
 
 @functools.lru_cache(maxsize=None)
-def _batch_fn():
-    """``jit(vmap(waterfill_times))`` over a leading grid axis — one
-    compiled executable per (G, F, L) shape signature (cached by jit)."""
+def _batch_inner():
+    """``vmap(waterfill_times)`` over a leading grid axis — unjitted, so
+    it doubles as the shard_map target of the sharded sweep fabric
+    (DESIGN.md §15)."""
     def one(cap, inc, msg):
         t, done, link_bytes = waterfill_times(cap, inc, msg)
         return {"latency": t, "done": done, "link_bytes": link_bytes}
 
-    return jax.jit(jax.vmap(one))
+    return jax.vmap(one)
 
 
-def simulate_pull_batch(caps, incs, msgs) -> dict[str, np.ndarray]:
+@functools.lru_cache(maxsize=None)
+def _batch_fn():
+    """``jit(vmap(waterfill_times))`` — one compiled executable per
+    (G, F, L) shape signature (cached by jit)."""
+    return jax.jit(_batch_inner())
+
+
+def simulate_pull_batch(caps, incs, msgs,
+                        devices: str = "single") -> dict[str, np.ndarray]:
     """Batched flow simulation: ``caps [G, L]``, ``incs [G, F, L]``,
     ``msgs [G, F]`` → dict of numpy float64 arrays (``latency [G]``,
     ``done [G, F]``, ``link_bytes [G, L]``). One compiled call per shape
-    signature covers the whole grid."""
+    signature covers the whole grid; ``devices`` (DESIGN.md §15) shards
+    the grid axis across local devices — a sharded grid also runs each
+    shard's lockstep ``while_loop`` only as long as its *local* slowest
+    point, not the global one."""
+    from . import sweep_shard
+
+    G = int(np.shape(caps)[0])
     with jax.experimental.enable_x64():
-        out = _batch_fn()(jnp.asarray(caps, dtype=jnp.float64),
-                          jnp.asarray(incs, dtype=jnp.float64),
-                          jnp.asarray(msgs, dtype=jnp.float64))
+        args = (jnp.asarray(caps, dtype=jnp.float64),
+                jnp.asarray(incs, dtype=jnp.float64),
+                jnp.asarray(msgs, dtype=jnp.float64))
+        if sweep_shard.resolve_devices(devices, G) == "sharded":
+            out = sweep_shard.sharded_grid_call(
+                _batch_inner(), args, (True, True, True), G)
+        else:
+            out = _batch_fn()(*args)
         return {k: np.asarray(v) for k, v in out.items()}

@@ -77,6 +77,10 @@ class PipelineConfig:
     backend: str = "auto"      # numpy | jax | auto (vectorized engine)
     n_buckets: int = 64        # milp time-bucket count
     time_limit: float = 30.0   # milp wall-clock budget (seconds)
+    devices: str = "auto"      # grid-axis execution of batched schedules:
+                               # "single" | "sharded" | "auto" (DESIGN.md
+                               # §15; result-neutral — never part of a
+                               # cache fingerprint)
 
 
 @dataclasses.dataclass

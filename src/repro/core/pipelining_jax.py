@@ -49,10 +49,10 @@ __all__ = ["schedule_batch"]
 
 
 @functools.lru_cache(maxsize=None)
-def _sched_fn(L: int, B: int):
-    """One compiled batched SGS per (chain length, batch) signature:
-    ``jit(vmap(instance))`` with durations/priorities as data, so every
-    same-shape grid point shares the executable."""
+def _sched_inner(L: int, B: int):
+    """Unjitted ``vmap(instance)`` per (chain length, batch) signature —
+    durations/priorities as data; doubles as the shard_map target of the
+    sharded sweep fabric (DESIGN.md §15)."""
     # Chain resource pattern (in, comp, out) per op: 0 = comm, 1 = comp.
     res = jnp.asarray(np.tile(np.array([0, 1, 0], dtype=np.int32),
                               L // 3))
@@ -84,17 +84,28 @@ def _sched_fn(L: int, B: int):
         # the makespan is their max (0.0 when no job ran — serial init).
         return jnp.max(free), starts
 
-    return jax.jit(jax.vmap(one))
+    return jax.vmap(one)
 
 
-def schedule_batch(segments_grid: np.ndarray, batch: int
-                   ) -> dict[str, np.ndarray]:
+@functools.lru_cache(maxsize=None)
+def _sched_fn(L: int, B: int):
+    """One compiled batched SGS per (chain length, batch) signature, so
+    every same-shape grid point shares the executable."""
+    return jax.jit(_sched_inner(L, B))
+
+
+def schedule_batch(segments_grid: np.ndarray, batch: int,
+                   devices: str = "single") -> dict[str, np.ndarray]:
     """Batched list scheduling: ``segments_grid [G, n, 3]`` per-op
     (t_in, t_comp, t_out) durations for ``G`` same-shape grid points →
     ``{"makespan": [G], "starts": [G, batch, 3n]}`` (``starts[g, s, p]``
     = start of sample ``s``'s p-th chain job, jid ``s*3n + p`` in
     :func:`repro.core.pipelining.build_jobs` order). One compiled call
-    per (n, batch) signature covers the whole group."""
+    per (n, batch) signature covers the whole group; ``devices``
+    (DESIGN.md §15) shards the grid axis across local devices with
+    bit-identical schedules."""
+    from . import sweep_shard
+
     seg = np.asarray(segments_grid, dtype=np.float64)
     G, n = seg.shape[0], seg.shape[1]
     L = 3 * n
@@ -103,6 +114,10 @@ def schedule_batch(segments_grid: np.ndarray, batch: int
         return {"makespan": np.zeros(G), "starts": np.zeros((G, batch, L))}
     prio = np.stack([chain_priorities(dur[g]) for g in range(G)])
     with jax.experimental.enable_x64():
-        ms, starts = _sched_fn(L, int(batch))(jnp.asarray(dur),
-                                              jnp.asarray(prio))
+        args = (jnp.asarray(dur), jnp.asarray(prio))
+        if sweep_shard.resolve_devices(devices, G) == "sharded":
+            ms, starts = sweep_shard.sharded_grid_call(
+                _sched_inner(L, int(batch)), args, (True, True), G)
+        else:
+            ms, starts = _sched_fn(L, int(batch))(*args)
         return {"makespan": np.asarray(ms), "starts": np.asarray(starts)}

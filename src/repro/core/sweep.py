@@ -43,6 +43,20 @@ This module turns those hand-rolled Python loops into:
     records are not shared across them — results must not depend on
     evaluation order).
 
+Two orthogonal execution knobs ride on every sweep (DESIGN.md §15):
+
+  * ``devices`` — ``"single" | "sharded" | "auto"`` shards each batched
+    group's grid axis across the local devices via ``shard_map``
+    (:mod:`repro.core.sweep_shard`). Sharding is *result-neutral*: solo
+    == batched == sharded bit-for-bit, so the knob is normalized out of
+    every cache fingerprint (:func:`_strip_devices`) and records are
+    device-count-independent — one cache serves all modes.
+  * ``checkpoint`` — a store path (or :class:`SweepCheckpointer`) makes
+    the sweep persist its new cache records every ``checkpoint_every``
+    points through :class:`repro.serve.cache_store.CacheStore`. Kill the
+    process anywhere and a rerun pointed at the same store resumes:
+    completed points load back as cache hits, only the tail recomputes.
+
 Typical use (LS baselines for one figure)::
 
     points = [EvalPoint(task, hw) for hw in hws for task in tasks]
@@ -53,6 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import sys
 import time
 from typing import Any, Callable, Iterable, Sequence
 
@@ -75,6 +90,7 @@ __all__ = [
     "cache_stats",
     "export_cache",
     "import_cache",
+    "SweepCheckpointer",
 ]
 
 
@@ -93,6 +109,8 @@ def run_grid(
     fn: Callable[..., Any],
     emit: Callable[[dict, Any, float], None] | None = None,
     progress: bool | str = False,
+    checkpoint=None,
+    checkpoint_every: int = 1,
 ) -> list[tuple[dict, Any, float]]:
     """Timed per-point driver for sweeps whose body stays per-point —
     external-solver work such as the HiGHS ``engine="milp"`` MIQP path
@@ -103,21 +121,40 @@ def run_grid(
     ``(point, result, microseconds)`` triples; ``emit`` (if given) is
     invoked per point for CSV-style reporting.
 
-    ``progress`` prints a ``point i/N`` line with the per-point solve time
-    after each point (pass a string to label the sweep), so long solver
-    grids show liveness without a custom ``emit``."""
+    ``progress`` writes a ``point i/N`` liveness line to **stderr**
+    after each point — per-point solve time, aggregate points/sec, and
+    an ETA for the remainder (pass a string to label the sweep) — so
+    long solver grids show progress without a custom ``emit`` and
+    without polluting piped-stdout CSV output.
+
+    ``checkpoint`` (a store path or :class:`SweepCheckpointer`) flushes
+    the process-wide result cache to disk every ``checkpoint_every``
+    points: when ``fn`` runs cached sweeps internally (the usual case —
+    per-point ``solve_grid``/``run_miqp`` wrappers), a killed grid
+    resumes from the same store with completed points as cache hits."""
     label = progress if isinstance(progress, str) else "run_grid"
+    ckpt = _resolve_checkpoint(checkpoint, checkpoint_every)
     out = []
+    t_start = time.perf_counter()
     for i, pt in enumerate(points):
         t0 = time.perf_counter()
         res = fn(**pt)
         us = (time.perf_counter() - t0) * 1e6
         out.append((pt, res, us))
+        if ckpt is not None and (i + 1) % ckpt.every == 0:
+            ckpt.flush()
         if progress:
-            print(f"[sweep] {label} point {i + 1}/{len(points)} "
-                  f"{us:.0f}us")
+            done = i + 1
+            elapsed = time.perf_counter() - t_start
+            rate = done / elapsed if elapsed > 0 else float("inf")
+            eta = (len(points) - done) / rate if rate > 0 else 0.0
+            print(f"[sweep] {label} point {done}/{len(points)} "
+                  f"{us:.0f}us ({rate:.1f} pts/s, eta {eta:.1f}s)",
+                  file=sys.stderr)
         if emit is not None:
             emit(pt, res, us)
+    if ckpt is not None:
+        ckpt.flush()
     return out
 
 
@@ -147,6 +184,17 @@ def _task_fingerprint(task: Task) -> tuple:
     return (task.name, tuple(task.ops))
 
 
+def _strip_devices(obj):
+    """Normalize the §15 ``devices`` execution knob out of a fingerprint
+    component. Sharding is result-neutral — solo == batched == sharded,
+    bit-for-bit — so records produced under any device mode (or device
+    count) must share ONE cache entry; a fingerprint that embedded the
+    knob would make a sharded run miss a single-device store."""
+    if dataclasses.is_dataclass(obj) and hasattr(obj, "devices"):
+        return dataclasses.replace(obj, devices="auto")
+    return obj
+
+
 def _point_fingerprint(pt: EvalPoint, backend: str) -> tuple:
     part = pt.resolved_partition()
     rd = (None if pt.redist_mask is None
@@ -158,7 +206,7 @@ def _point_fingerprint(pt: EvalPoint, backend: str) -> tuple:
         backend,
         _task_fingerprint(pt.task),
         pt.hw,
-        pt.options,
+        _strip_devices(pt.options),
         part.Px.tobytes(), part.Py.tobytes(), part.collectors.tobytes(),
         rd,
     )
@@ -218,6 +266,78 @@ def import_cache(entries: dict, replace: bool = False) -> int:
     return n
 
 
+# ------------------------------------------------- checkpointed resume
+class SweepCheckpointer:
+    """Periodic persistence of the §9 result cache to an on-disk
+    :class:`repro.serve.cache_store.CacheStore` (DESIGN.md §15).
+
+    Construction *loads* the store into the process cache — a sweep
+    pointed at the store of a killed run resumes with every completed
+    point a cache hit — and remembers which fingerprints the store
+    already holds. :meth:`flush` appends only the delta (cache entries
+    not yet persisted); the store's append path tears at most the tail
+    record on a crash, and :meth:`~repro.serve.cache_store.CacheStore.
+    load` drops a torn tail, so a kill at ANY instant costs at most one
+    unflushed chunk of points.
+
+    ``every`` is the flush cadence in points (sweep functions chunk the
+    grid by it); ``resumed`` counts the records imported at construction.
+    """
+
+    def __init__(self, path, every: int = 8):
+        from ..serve.cache_store import CacheStore
+
+        self.store = path if isinstance(path, CacheStore) else \
+            CacheStore(path)
+        self.every = max(1, int(every))
+        entries = self.store.load()
+        self.resumed = import_cache(entries)
+        self._persisted = set(entries)
+        self.flushes = 0
+
+    def pending(self) -> int:
+        """Cache entries not yet persisted to the store."""
+        return sum(1 for k in _CACHE if k not in self._persisted)
+
+    def flush(self) -> int:
+        """Append every unpersisted cache entry; returns the count."""
+        new = {k: v for k, v in _CACHE.items()
+               if k not in self._persisted}
+        if new:
+            self.store.append(new)
+            self._persisted.update(new)
+            self.flushes += 1
+        return len(new)
+
+
+def _resolve_checkpoint(checkpoint, every: int):
+    if checkpoint is None or isinstance(checkpoint, SweepCheckpointer):
+        return checkpoint
+    return SweepCheckpointer(checkpoint, every=every)
+
+
+def _checkpointed(points, ckpt: SweepCheckpointer, straggler, run_chunk):
+    """Drive a batched sweep in checkpoint-sized chunks: each chunk's
+    records land in the process cache (the sweep bodies insert them) and
+    :meth:`SweepCheckpointer.flush` persists the delta, so a kill loses
+    at most the in-flight chunk. ``straggler`` (a
+    :class:`repro.runtime.fault_tolerance.StragglerMonitor`) observes
+    per-chunk wall time and flags outlier chunks to stderr — the §15
+    liveness signal for heterogeneous shards."""
+    out = []
+    for c, s in enumerate(range(0, len(points), ckpt.every)):
+        chunk = points[s:s + ckpt.every]
+        t0 = time.perf_counter()
+        out.extend(run_chunk(chunk))
+        dt = time.perf_counter() - t0
+        ckpt.flush()
+        if straggler is not None and straggler.observe(c, dt):
+            print(f"[sweep] straggler: chunk {c} "
+                  f"(points {s}:{s + len(chunk)}) took {dt:.3f}s",
+                  file=sys.stderr)
+    return out
+
+
 def _record(point: EvalPoint, out: dict[str, np.ndarray], i: int | tuple
             ) -> dict[str, Any]:
     """Extract one point's scalars/arrays from a batched output dict."""
@@ -256,6 +376,10 @@ def eval_sweep(
     points: Sequence[EvalPoint],
     backend: str = "jax",
     cache: bool = True,
+    devices: str | None = None,
+    checkpoint=None,
+    checkpoint_every: int = 8,
+    straggler=None,
 ) -> list[dict[str, Any]]:
     """Evaluate every point; returns records aligned with ``points``.
 
@@ -263,10 +387,25 @@ def eval_sweep(
     options and each group is evaluated in one compiled call (consts and
     genomes stacked on a leading grid axis). Numpy backend: per-point
     reference loop — same records, used by the parity tests.
+
+    ``devices`` (DESIGN.md §15) shards each group's grid axis across
+    local devices — result-neutral, see the module docstring; ``None``
+    defers to each point's ``options.devices``. ``checkpoint`` (a store
+    path or :class:`SweepCheckpointer`) persists records every
+    ``checkpoint_every`` points for kill/resume; requires ``cache=True``.
     """
     if backend not in ("numpy", "jax"):
         raise ValueError(f"unknown backend {backend!r}; "
                          f"one of ('numpy', 'jax')")
+    ckpt = _resolve_checkpoint(checkpoint, checkpoint_every)
+    if ckpt is not None:
+        if not cache:
+            raise ValueError("checkpointing requires cache=True — "
+                             "records persist through the result cache")
+        return _checkpointed(
+            points, ckpt, straggler,
+            lambda c: eval_sweep(c, backend=backend, cache=True,
+                                 devices=devices))
     records: list[dict[str, Any] | None] = [None] * len(points)
     todo: list[int] = []
     fps: list[tuple | None] = [None] * len(points)
@@ -315,7 +454,9 @@ def eval_sweep(
             co = np.stack([g[2] for g in genomes])[:, None]
             rd = np.stack([g[3] for g in genomes])[:, None]
             out = evaluator_jax.grid_evaluate(
-                stacked, points[idxs[0]].options, Px, Py, co, rd)
+                stacked, points[idxs[0]].options, Px, Py, co, rd,
+                devices=(points[idxs[0]].options.devices
+                         if devices is None else devices))
             for g, i in enumerate(idxs):
                 records[i] = _record(points[i], out, (g, 0))
 
@@ -336,6 +477,10 @@ def netsim_sweep(
     message_bytes: float,
     backend: str = "jax",
     cache: bool = True,
+    devices: str | None = None,
+    checkpoint=None,
+    checkpoint_every: int = 8,
+    straggler=None,
 ) -> list[dict[str, Any]]:
     """Run the all-chiplets-pull flow simulation on every
     :class:`repro.core.netsim.MeshNet`; returns records aligned with
@@ -350,12 +495,25 @@ def netsim_sweep(
     engine — the parity reference. Records carry ``latency`` (seconds),
     per-flow ``done`` times and per-link ``link_bytes`` over the dense
     link space, and share the process-wide result cache (fingerprint:
-    backend, mesh shape, bandwidths, attachment set, message size)."""
+    backend, mesh shape, bandwidths, attachment set, message size).
+
+    ``devices`` / ``checkpoint`` / ``straggler`` follow the §15 contract
+    (module docstring): sharding is result-neutral and checkpointing
+    persists records for kill/resume."""
     from . import netsim
 
     if backend not in ("numpy", "jax"):
         raise ValueError(f"unknown backend {backend!r}; "
                          f"one of ('numpy', 'jax')")
+    ckpt = _resolve_checkpoint(checkpoint, checkpoint_every)
+    if ckpt is not None:
+        if not cache:
+            raise ValueError("checkpointing requires cache=True — "
+                             "records persist through the result cache")
+        return _checkpointed(
+            nets, ckpt, straggler,
+            lambda c: netsim_sweep(c, message_bytes, backend=backend,
+                                   cache=True, devices=devices))
     records: list[dict[str, Any] | None] = [None] * len(nets)
     todo: list[int] = []
     fps: list[tuple | None] = [None] * len(nets)
@@ -389,7 +547,9 @@ def netsim_sweep(
             caps = np.stack([nets[i].link_caps() for i in idxs])
             incs = np.stack([nets[i].pull_incidence() for i in idxs])
             msgs = np.full((len(idxs), X * Y), float(message_bytes))
-            out = netsim_jax.simulate_pull_batch(caps, incs, msgs)
+            out = netsim_jax.simulate_pull_batch(
+                caps, incs, msgs,
+                devices="auto" if devices is None else devices)
             for g, i in enumerate(idxs):
                 records[i] = {"latency": float(out["latency"][g]),
                               "done": out["done"][g],
@@ -410,14 +570,16 @@ def _solver_fingerprint(pt: EvalPoint, method: str, backend: str,
     and any hyperparameter change is a different record; so is the
     backend: the GA engines draw from different RNGs and the lattice
     scorers agree only to rtol 1e-9 (arg-min ties could flip), so
-    records must never be served across backends."""
+    records must never be served across backends. The §15 ``devices``
+    knob is normalized out of both the options and the config
+    (:func:`_strip_devices`) — sharding never changes a result."""
     return (
         method, backend,
         _task_fingerprint(pt.task),
         pt.hw,
-        pt.options,
+        _strip_devices(pt.options),
         objective,
-        cfg,
+        _strip_devices(cfg),
     )
 
 
@@ -455,6 +617,10 @@ def solve_grid(
     backend: str = "jax",
     cache: bool = True,
     method: str = "ga",
+    devices: str | None = None,
+    checkpoint=None,
+    checkpoint_every: int = 8,
+    straggler=None,
 ) -> list:
     """Run one solver search per point; returns records aligned with
     ``points`` — ``GAResult`` for ``method="ga"`` (DESIGN.md §10),
@@ -481,9 +647,27 @@ def solve_grid(
     with their concrete-backend equivalents; likewise
     ``MIQPConfig(engine="auto")`` resolves first. ``method="miqp"`` with
     ``engine="milp"`` cannot batch — those points run serially through
-    :func:`repro.core.miqp.run_miqp` (still cached)."""
+    :func:`repro.core.miqp.run_miqp` (still cached).
+
+    ``devices`` (DESIGN.md §15) shards each group's island/grid axis
+    across local devices — result-neutral and fingerprint-invisible;
+    ``None`` defers to ``cfg.devices``. ``checkpoint`` (a store path or
+    :class:`SweepCheckpointer`) persists solver records every
+    ``checkpoint_every`` points for kill/resume (``cache=True`` only);
+    ``straggler`` flags outlier chunk wall-times to stderr."""
+    ckpt = _resolve_checkpoint(checkpoint, checkpoint_every)
+    if ckpt is not None:
+        if not cache:
+            raise ValueError("checkpointing requires cache=True — "
+                             "records persist through the result cache")
+        return _checkpointed(
+            points, ckpt, straggler,
+            lambda c: solve_grid(c, objective, cfg, backend=backend,
+                                 cache=True, method=method,
+                                 devices=devices))
     if method == "miqp":
-        return _solve_grid_miqp(points, objective, cfg, backend, cache)
+        return _solve_grid_miqp(points, objective, cfg, backend, cache,
+                                devices)
     if method != "ga":
         raise ValueError(f"unknown method {method!r}; one of ('ga', 'miqp')")
     from .evaluator import resolve_auto_backend
@@ -522,13 +706,14 @@ def solve_grid(
         for i in todo:
             pt = points[i]
             sig = (len(pt.task), pt.hw.X, pt.hw.Y,
-                   pt.hw.topology.n_entrances, pt.options)
+                   pt.hw.topology.n_entrances, _strip_devices(pt.options))
             groups.setdefault(sig, []).append(i)
         for sig, idxs in groups.items():
             outs = ga_jax.solve_islands(
                 [points[i].task for i in idxs],
                 [points[i].hw for i in idxs],
-                points[idxs[0]].options, objective, cfg)
+                points[idxs[0]].options, objective, cfg,
+                devices=devices)
             for i, out in zip(idxs, outs):
                 records[i] = out
 
@@ -565,7 +750,8 @@ def _pipeline_fingerprint(pt: PipelinePoint, cfg) -> tuple:
     backend included — segment-duration bytes and batch. The engines are
     bit-identical (DESIGN.md §13), but the backend stays in the key for
     consistency with every other record family."""
-    return ("pipeline", cfg, pt.durations().tobytes(), int(pt.batch))
+    return ("pipeline", _strip_devices(cfg), pt.durations().tobytes(),
+            int(pt.batch))
 
 
 def pipeline_sweep(
@@ -573,6 +759,10 @@ def pipeline_sweep(
     cfg=None,
     backend: str = "jax",
     cache: bool = True,
+    devices: str | None = None,
+    checkpoint=None,
+    checkpoint_every: int = 8,
+    straggler=None,
 ) -> list:
     """Schedule every pipelining point; returns
     :class:`~repro.core.pipelining.PipelineResult` records aligned with
@@ -590,13 +780,27 @@ def pipeline_sweep(
     sweep-level ``backend`` argument (the :class:`PipelineConfig`
     contract); ``"auto"`` resolves to jax — grid batching always wins
     here, and the engines agree bit-for-bit, so the resolution is purely
-    a performance choice."""
+    a performance choice.
+
+    ``devices`` / ``checkpoint`` / ``straggler`` follow the §15 contract
+    (module docstring); ``devices=None`` defers to ``cfg.devices``."""
     from .pipelining import (PipelineConfig, PipelineResult,
                              pipeline_batch, resolve_auto_pipeline_engine,
                              sequential_makespan)
 
     if cfg is None:
         cfg = PipelineConfig()
+    ckpt = _resolve_checkpoint(checkpoint, checkpoint_every)
+    if ckpt is not None:
+        if not cache:
+            raise ValueError("checkpointing requires cache=True — "
+                             "records persist through the result cache")
+        return _checkpointed(
+            points, ckpt, straggler,
+            lambda c: pipeline_sweep(c, cfg, backend=backend, cache=True,
+                                     devices=devices))
+    if devices is not None:
+        cfg = dataclasses.replace(cfg, devices=devices)
     engine = resolve_auto_pipeline_engine(cfg.engine)
     # An explicit cfg.backend wins over the sweep-level default (the
     # PipelineConfig contract); "auto" resolves to jax here — grid
@@ -641,7 +845,8 @@ def pipeline_sweep(
                               []).append(i)
         for (n, B), idxs in groups.items():
             durs = np.stack([points[i].durations() for i in idxs])
-            out = pipelining_jax.schedule_batch(durs, B)
+            out = pipelining_jax.schedule_batch(durs, B,
+                                                devices=cfg.devices)
             for g, i in enumerate(idxs):
                 records[i] = PipelineResult(
                     B, sequential_makespan(points[i].segments, B),
@@ -653,7 +858,8 @@ def pipeline_sweep(
     return records
 
 
-def _solve_grid_miqp(points, objective, cfg, backend, cache) -> list:
+def _solve_grid_miqp(points, objective, cfg, backend, cache,
+                     devices=None) -> list:
     """``solve_grid`` body for ``method="miqp"`` (DESIGN.md §12)."""
     import dataclasses as _dc
 
@@ -662,6 +868,8 @@ def _solve_grid_miqp(points, objective, cfg, backend, cache) -> list:
 
     if cfg is None:
         cfg = MIQPConfig()
+    if devices is not None:
+        cfg = _dc.replace(cfg, devices=devices)
     engine = resolve_auto_engine(cfg.engine)
     backend = (resolve_auto_backend(backend, cfg.score_chunk)
                if engine == "lattice" else "numpy")
@@ -699,7 +907,7 @@ def _solve_grid_miqp(points, objective, cfg, backend, cache) -> list:
         for i in todo:
             pt = points[i]
             sig = (len(pt.task), pt.hw.X, pt.hw.Y,
-                   pt.hw.topology.n_entrances, pt.options)
+                   pt.hw.topology.n_entrances, _strip_devices(pt.options))
             groups.setdefault(sig, []).append(i)
         for sig, idxs in groups.items():
             outs = miqp_jax.solve_lattice_batch(

@@ -19,9 +19,28 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_debug_mesh(n_devices: int | None = None, *, pod: bool = False):
-    """Small mesh over however many (host) devices exist — used by tests."""
-    n = n_devices or len(jax.devices())
-    if pod and n >= 8:
-        return jax.make_mesh((2, 2, n // 4), ("pod", "data", "model"))
-    d = 2 if n % 2 == 0 and n >= 4 else 1
-    return jax.make_mesh((d, n // d), ("data", "model"))
+    """Small mesh over the first ``n_devices`` host devices — used by
+    tests, the train driver, and the sharded sweep fabric (DESIGN.md §15).
+
+    Always carries the ``("data", "model")`` axes the launch-layer
+    sharding rules (``launch/specs.py``) are written against (plus
+    ``"pod"`` when ``pod=True`` applies). Shape resolution: ``pod=True``
+    with ``n`` a multiple of 4 (and ≥ 8) gives the 3-axis
+    ``(2, 2, n//4)`` pod mesh — the old code built that shape for ANY
+    ``n ≥ 8`` and crashed whenever ``2·2·(n//4) != n`` (n=10, n=13, …);
+    even ``n`` puts the factor of 2 on ``data`` — the old fallback gave
+    n=2 the degenerate ``(1, 2)`` mesh whose dead ``data`` axis silently
+    disabled data parallelism; odd ``n`` is ``(1, n)`` (a 2-way split
+    does not exist).
+    """
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    if n > len(devs):
+        raise ValueError(f"make_debug_mesh: {n} devices requested but "
+                         f"only {len(devs)} exist")
+    devs = devs[:n]
+    if pod and n >= 8 and n % 4 == 0:
+        return jax.make_mesh((2, 2, n // 4), ("pod", "data", "model"),
+                             devices=devs)
+    d = 2 if n % 2 == 0 and n >= 2 else 1
+    return jax.make_mesh((d, n // d), ("data", "model"), devices=devs)

@@ -48,7 +48,9 @@ __all__ = ["CacheStore", "SCHEMA_VERSION", "MAGIC"]
 
 #: Bump when the record families or fingerprint axes change shape in a
 #: way pickle cannot bridge; old stores then load as a cold start.
-SCHEMA_VERSION = 1
+#: v2: configs/options grew the §15 ``devices`` field — pre-v2 pickles
+#: would unpickle into dataclasses missing it and break fingerprinting.
+SCHEMA_VERSION = 2
 MAGIC = "mcmcomm-sweep-cache"
 
 _LEN = struct.Struct("<II")    # payload_len, crc32

@@ -93,12 +93,18 @@ class OptServer:
                  max_queue: int = 256, max_batch: int = 64,
                  max_retries: int = 2, flush_every: int = 1,
                  cache: bool = True,
+                 devices: str | None = None,
                  straggler: StragglerMonitor | None = None,
                  autostart: bool = True, log=None):
         self.max_batch = max(1, int(max_batch))
         self.max_retries = max(0, int(max_retries))
         self.flush_every = max(1, int(flush_every))
         self.cache = cache
+        # §15 execution knob forwarded to every coalesced sweep call;
+        # result-neutral and fingerprint-invisible, so a sharded server
+        # shares its store with single-device clients. None defers to
+        # each request's options/config.
+        self.devices = devices
         self.monitor = straggler or StragglerMonitor()
         self.log = log or (lambda msg: None)
         self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
@@ -272,14 +278,17 @@ class OptServer:
         pts = [r.point for r in reqs]
         if key.kind == "eval":
             return self._calls["eval"](pts, backend=key.backend,
-                                       cache=self.cache)
+                                       cache=self.cache,
+                                       devices=self.devices)
         if key.kind == "solve":
             return self._calls["solve"](pts, key.objective, key.cfg,
                                         backend=key.backend,
                                         cache=self.cache,
-                                        method=key.method)
+                                        method=key.method,
+                                        devices=self.devices)
         return self._calls["pipeline"](pts, key.cfg, backend=key.backend,
-                                       cache=self.cache)
+                                       cache=self.cache,
+                                       devices=self.devices)
 
     def _serve_group(self, key: CallKey, items: list[_Pending]) -> None:
         """One coalesced call, with retry-with-restore and solo-fallback
@@ -425,10 +434,13 @@ def main(argv=None) -> None:
     ap.add_argument("--store", default=None,
                     help="persistent sweep-cache store path")
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--devices", default=None,
+                    choices=("single", "sharded", "auto"),
+                    help="§15 sweep sharding mode (default: per-request)")
     args = ap.parse_args(argv)
 
     srv = OptServer(store_path=args.store, max_batch=args.max_batch,
-                    log=print)
+                    devices=args.devices, log=print)
     futs = [srv.submit(r) for r in _demo_requests(args.requests)]
     for f in futs:
         f.result(timeout=300)

@@ -1,0 +1,203 @@
+"""Checkpointed sweep resume (DESIGN.md §15): periodic cache
+persistence through ``serve.cache_store``, kill/restart recovery with
+exact hit accounting, straggler flagging, and the run_grid progress
+line. The chaos test kills a real child process mid-grid (``os._exit``
+after K checkpoint appends — no cleanup, no atexit) and asserts the
+restarted run recomputes only the tail, bitwise-identically to an
+uninterrupted run. Children use the numpy backend: no jax import, so
+they start in milliseconds."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import EvalOptions, GemmOp, Task, make_hw
+from repro.core import sweep
+from repro.core.ga import GAConfig
+from repro.runtime.fault_tolerance import StragglerMonitor
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def toy_task(n=3, m=512):
+    ops = [GemmOp("g0", M=m, K=256, N=512)]
+    for i in range(1, n):
+        ops.append(GemmOp(f"g{i}", M=m, K=ops[-1].N, N=512, chained=True))
+    return Task(f"toy{n}_{m}", ops)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    sweep.clear_cache()
+    yield
+    sweep.clear_cache()
+
+
+def _points(k=6):
+    task = toy_task(3)
+    return [sweep.EvalPoint(task, make_hw("A", 4, "hbm", bw_nop=64.0 + i),
+                            EvalOptions(redistribution=True))
+            for i in range(k)]
+
+
+# ------------------------------------------------- in-process semantics
+def test_checkpoint_requires_cache():
+    with pytest.raises(ValueError, match="cache=True"):
+        sweep.eval_sweep(_points(2), backend="numpy", cache=False,
+                         checkpoint="/tmp/unused-store.bin")
+
+
+def test_eval_sweep_checkpoint_roundtrip(tmp_path):
+    path = str(tmp_path / "store.bin")
+    pts = _points(6)
+    recs = sweep.eval_sweep(pts, backend="numpy", checkpoint=path,
+                            checkpoint_every=2)
+    assert sweep.cache_stats() == {"hits": 0, "misses": 6}
+    sweep.clear_cache()
+    recs2 = sweep.eval_sweep(pts, backend="numpy", checkpoint=path,
+                             checkpoint_every=2)
+    # the store held every record: pure resume, zero recomputation
+    assert sweep.cache_stats() == {"hits": 6, "misses": 0}
+    for a, b in zip(recs, recs2):
+        assert a["latency"] == b["latency"]
+        assert np.array_equal(a["t_in"], b["t_in"])
+
+
+def test_partial_store_resumes_tail_only(tmp_path):
+    path = str(tmp_path / "store.bin")
+    pts = _points(6)
+    sweep.eval_sweep(pts[:4], backend="numpy", checkpoint=path)
+    sweep.clear_cache()
+    sweep.eval_sweep(pts, backend="numpy", checkpoint=path)
+    assert sweep.cache_stats() == {"hits": 4, "misses": 2}
+
+
+def test_solve_grid_checkpoint_and_straggler(tmp_path):
+    path = str(tmp_path / "store.bin")
+    pts = _points(4)
+    cfg = GAConfig(population=16, generations=2, seed=1)
+    mon = StragglerMonitor()
+    sweep.solve_grid(pts, "latency", cfg, backend="numpy",
+                     checkpoint=path, checkpoint_every=2, straggler=mon)
+    assert mon.ewma > 0            # observed per-chunk wall-times
+    sweep.clear_cache()
+    recs = sweep.solve_grid(pts, "latency", cfg, backend="numpy",
+                            checkpoint=path, checkpoint_every=2)
+    assert sweep.cache_stats() == {"hits": 4, "misses": 0}
+    assert all(r is not None for r in recs)
+
+
+def test_straggler_flag_emits_stderr_line(tmp_path, capsys):
+    class AlwaysSlow:
+        def observe(self, step, dt):
+            return True
+
+    sweep.eval_sweep(_points(4), backend="numpy",
+                     checkpoint=str(tmp_path / "s.bin"),
+                     checkpoint_every=2, straggler=AlwaysSlow())
+    assert "straggler" in capsys.readouterr().err
+
+
+def test_run_grid_progress_and_checkpoint(tmp_path, capsys):
+    path = str(tmp_path / "store.bin")
+    pts = _points(3)
+    out = sweep.run_grid(
+        [{"i": i} for i in range(3)],
+        lambda i: sweep.eval_sweep([pts[i]], backend="numpy")[0],
+        progress="grid", checkpoint=path)
+    assert len(out) == 3
+    err = capsys.readouterr().err
+    # liveness goes to stderr: label, counter, rate, ETA
+    assert "grid point 3/3" in err
+    assert "pts/s" in err and "eta" in err
+    sweep.clear_cache()
+    sweep.eval_sweep(pts, backend="numpy", checkpoint=path)
+    assert sweep.cache_stats() == {"hits": 3, "misses": 0}
+
+
+# ----------------------------------------------------- chaos kill/resume
+_CHILD_PRELUDE = """
+    import os
+    import numpy as np
+    from repro.core import sweep, EvalOptions, GemmOp, Task, make_hw
+
+    def points():
+        ops = [GemmOp("g0", M=512, K=256, N=512)]
+        for i in range(1, 3):
+            ops.append(GemmOp(f"g{i}", M=512, K=ops[-1].N, N=512,
+                              chained=True))
+        task = Task("toy3", ops)
+        return [sweep.EvalPoint(
+                    task, make_hw("A", 4, "hbm", bw_nop=64.0 + i),
+                    EvalOptions(redistribution=True))
+                for i in range(6)]
+
+    def digest(recs):
+        return "|".join(float(r["latency"]).hex() + ":" +
+                        r["t_in"].tobytes().hex() for r in recs)
+"""
+
+
+def _run_child(body: str, store: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["STORE"] = store
+    script = textwrap.dedent(_CHILD_PRELUDE) + textwrap.dedent(body)
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=120)
+
+
+def test_chaos_kill_midgrid_then_resume(tmp_path):
+    store = str(tmp_path / "store.bin")
+
+    # -- worker 1: dies hard (no cleanup) after K=3 checkpoint appends
+    killed = _run_child("""
+        from repro.serve import cache_store
+
+        K = 3
+        real = cache_store.CacheStore.append
+        calls = {"n": 0}
+
+        def dying_append(self, entries):
+            r = real(self, entries)
+            calls["n"] += 1
+            if calls["n"] >= K:
+                os._exit(9)         # SIGKILL-style: skip atexit/finally
+            return r
+
+        cache_store.CacheStore.append = dying_append
+        sweep.eval_sweep(points(), backend="numpy",
+                         checkpoint=os.environ["STORE"],
+                         checkpoint_every=1)
+        os._exit(1)                 # unreachable: the grid must die
+    """, store)
+    assert killed.returncode == 9, (killed.stdout, killed.stderr)
+    assert os.path.exists(store)
+
+    # -- worker 2: restart against the same store; only the tail runs
+    resumed = _run_child("""
+        recs = sweep.eval_sweep(points(), backend="numpy",
+                                checkpoint=os.environ["STORE"],
+                                checkpoint_every=1)
+        st = sweep.cache_stats()
+        print(f"HITS={st['hits']} MISSES={st['misses']}")
+        print("DIGEST=" + digest(recs))
+    """, store)
+    assert resumed.returncode == 0, resumed.stderr
+    # cache_hits == points completed before the kill, misses == the rest
+    assert "HITS=3 MISSES=3" in resumed.stdout
+
+    # -- reference: uninterrupted run, no store — bitwise-equal records
+    reference = _run_child("""
+        recs = sweep.eval_sweep(points(), backend="numpy")
+        print("DIGEST=" + digest(recs))
+    """, store)
+    assert reference.returncode == 0, reference.stderr
+    dig = [line for line in resumed.stdout.splitlines()
+           if line.startswith("DIGEST=")]
+    ref = [line for line in reference.stdout.splitlines()
+           if line.startswith("DIGEST=")]
+    assert dig == ref and dig, (resumed.stdout, reference.stdout)

@@ -1,0 +1,197 @@
+"""Sharded sweep fabric invariants (DESIGN.md §15): mode resolution,
+solo == sharded bitwise parity for every record family, padding of
+non-multiple grids, fingerprint device-independence (one cache across
+modes), and a forced-8-device subprocess parity check."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import EvalOptions, GemmOp, Task, make_hw
+from repro.core import sweep
+from repro.core.ga import GAConfig
+from repro.core.miqp import MIQPConfig
+from repro.core.netsim import MeshNet
+from repro.core.sweep_shard import (DEVICE_MODES, device_count,
+                                    resolve_devices)
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+def toy_task(n=3, m=512):
+    ops = [GemmOp("g0", M=m, K=256, N=512)]
+    for i in range(1, n):
+        ops.append(GemmOp(f"g{i}", M=m, K=ops[-1].N, N=512, chained=True))
+    return Task(f"toy{n}_{m}", ops)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    sweep.clear_cache()
+    yield
+    sweep.clear_cache()
+
+
+def _eval_points(k=3):
+    task = toy_task(3)
+    return [sweep.EvalPoint(task, make_hw(t, 4, "hbm"),
+                            EvalOptions(congestion="flow"))
+            for t in ("A", "B", "C")][:k]
+
+
+# ------------------------------------------------------ mode resolution
+def test_resolve_devices_modes():
+    assert resolve_devices("single", 100) == "single"
+    assert resolve_devices("sharded", 1) == "sharded"   # explicit wins
+    n = device_count()
+    want = "sharded" if n > 1 else "single"
+    assert resolve_devices("auto", 100) == want
+    assert resolve_devices(None, 100) == want           # None == auto
+    assert resolve_devices("auto", 1) == "single"       # nothing to shard
+    with pytest.raises(ValueError, match="devices"):
+        resolve_devices("tpu", 4)
+
+
+def test_options_and_configs_validate_devices():
+    with pytest.raises(ValueError):
+        EvalOptions(devices="bogus")
+    for mode in DEVICE_MODES:
+        assert EvalOptions(devices=mode).devices == mode
+    assert GAConfig(devices="sharded").devices == "sharded"
+    assert MIQPConfig(devices="sharded").devices == "sharded"
+
+
+# ----------------------------------------- bitwise parity (all families)
+def test_eval_sweep_sharded_matches_single_bitwise():
+    pts = _eval_points()
+    solo = sweep.eval_sweep(pts, cache=False, devices="single")
+    shard = sweep.eval_sweep(pts, cache=False, devices="sharded")
+    for a, b in zip(solo, shard):
+        assert a["latency"] == b["latency"]
+        assert a["energy"] == b["energy"]
+        for k in ("t_in", "t_comp", "t_out"):
+            assert np.array_equal(a[k], b[k])
+
+
+def test_netsim_sweep_sharded_matches_single_bitwise():
+    nets = [MeshNet(4, 4, 64.0 + i, 128.0, [0, 3]) for i in range(3)]
+    solo = sweep.netsim_sweep(nets, 1e6, cache=False, devices="single")
+    shard = sweep.netsim_sweep(nets, 1e6, cache=False, devices="sharded")
+    for a, b in zip(solo, shard):
+        assert a["latency"] == b["latency"]
+        assert np.array_equal(a["done"], b["done"])
+        assert np.array_equal(a["link_bytes"], b["link_bytes"])
+
+
+def test_solve_grid_ga_sharded_matches_single_bitwise():
+    pts = _eval_points()
+    cfg = GAConfig(population=32, generations=3, seed=7)
+    solo = sweep.solve_grid(pts, "latency", cfg, cache=False,
+                            devices="single")
+    shard = sweep.solve_grid(pts, "latency", cfg, cache=False,
+                             devices="sharded")
+    for a, b in zip(solo, shard):
+        assert a.objective == b.objective
+        assert np.array_equal(a.partition.Px, b.partition.Px)
+        assert np.array_equal(a.partition.Py, b.partition.Py)
+        assert np.array_equal(a.history, b.history)
+
+
+def test_solve_grid_miqp_sharded_matches_single_bitwise():
+    pts = _eval_points()
+    cfg = MIQPConfig(candidate_budget=64, eval_budget=256)
+    solo = sweep.solve_grid(pts, "latency", cfg, cache=False,
+                            method="miqp", devices="single")
+    shard = sweep.solve_grid(pts, "latency", cfg, cache=False,
+                             method="miqp", devices="sharded")
+    for a, b in zip(solo, shard):
+        assert a.objective == b.objective
+        assert np.array_equal(a.partition.Px, b.partition.Px)
+
+
+def test_pipeline_sweep_sharded_matches_single_bitwise():
+    segs = [(f"op{i}", 1.0 + i, 2.0, 0.5) for i in range(4)]
+    pts = [sweep.PipelinePoint(
+        [(n, a * (1 + 0.5 * k), b, c) for n, a, b, c in segs], 4)
+        for k in range(3)]
+    solo = sweep.pipeline_sweep(pts, cache=False, devices="single")
+    shard = sweep.pipeline_sweep(pts, cache=False, devices="sharded")
+    for a, b in zip(solo, shard):
+        assert a.sequential == b.sequential
+        assert a.pipelined == b.pipelined
+
+
+# ----------------------------------------- fingerprints & shared cache
+def test_devices_knob_is_fingerprint_invisible():
+    task, hw = toy_task(2), make_hw("A", 4, "hbm")
+    fps = {sweep._point_fingerprint(
+        sweep.EvalPoint(task, hw, EvalOptions(devices=mode)), "jax")
+        for mode in DEVICE_MODES}
+    assert len(fps) == 1
+    cfg_fps = {sweep._solver_fingerprint(
+        sweep.EvalPoint(task, hw), "ga", "jax", "latency",
+        GAConfig(devices=mode)) for mode in DEVICE_MODES}
+    assert len(cfg_fps) == 1
+
+
+def test_cache_shared_across_device_modes():
+    pts = _eval_points()
+    sweep.eval_sweep(pts, devices="single")
+    assert sweep.cache_stats() == {"hits": 0, "misses": 3}
+    recs = sweep.eval_sweep(pts, devices="sharded")
+    assert sweep.cache_stats() == {"hits": 3, "misses": 3}
+    assert all(r is not None for r in recs)
+
+
+# ------------------------------------------- forced-8-device subprocess
+def test_sharded_parity_on_8_forced_devices():
+    """Real shard_map over 8 virtual devices, including a grid (G=10)
+    that pads to the next multiple of the mesh size."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    script = textwrap.dedent("""
+        import jax
+        import numpy as np
+        from repro.core import sweep, EvalOptions, GemmOp, Task, make_hw
+        from repro.core.ga import GAConfig
+        from repro.core.sweep_shard import grid_mesh, resolve_devices
+
+        assert jax.device_count() == 8
+        assert grid_mesh().size == 8
+        assert resolve_devices("auto", 10) == "sharded"
+
+        ops = [GemmOp("g0", M=512, K=256, N=512)]
+        for i in range(1, 3):
+            ops.append(GemmOp(f"g{i}", M=512, K=ops[-1].N, N=512,
+                              chained=True))
+        task = Task("toy3", ops)
+        # G=10 pads to 16 over the 8-device mesh (tail replicates row 0)
+        hws = [make_hw("A", 4, "hbm", bw_nop=64.0 + i) for i in range(10)]
+        pts = [sweep.EvalPoint(task, hw, EvalOptions(congestion="flow"))
+               for hw in hws]
+        solo = sweep.eval_sweep(pts, cache=False, devices="single")
+        shard = sweep.eval_sweep(pts, cache=False, devices="sharded")
+        for a, b in zip(solo, shard):
+            assert a["latency"] == b["latency"]
+            assert np.array_equal(a["t_in"], b["t_in"])
+            assert np.array_equal(a["t_out"], b["t_out"])
+
+        cfg = GAConfig(population=32, generations=3, seed=7)
+        s1 = sweep.solve_grid(pts[:5], "latency", cfg, cache=False,
+                              devices="single")
+        s2 = sweep.solve_grid(pts[:5], "latency", cfg, cache=False,
+                              devices="sharded")
+        for a, b in zip(s1, s2):
+            assert a.objective == b.objective
+            assert np.array_equal(a.partition.Px, b.partition.Px)
+            assert np.array_equal(a.history, b.history)
+        print("SHARD-PARITY-OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "SHARD-PARITY-OK" in out.stdout
