@@ -2,8 +2,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test smoke bench-fast bench-smoke ga-fitness ga-evolve netsim \
-	miqp-solve pipeline-schedule opt-serve sweep-shard quickstart
+.PHONY: test smoke bench-fast bench-smoke bench-compare ga-fitness \
+	ga-evolve netsim miqp-solve pipeline-schedule opt-serve \
+	sweep-shard cosearch quickstart
 
 # Tier-1 verify — the command CI and the roadmap pin.
 test:
@@ -39,6 +40,15 @@ bench-smoke:
 	$(PY) -m benchmarks.perf_iterations --cell pipeline_schedule --smoke
 	$(PY) -m benchmarks.perf_iterations --cell opt_serve --smoke
 	$(PY) -m benchmarks.perf_iterations --cell sweep_shard --smoke
+	$(PY) -m benchmarks.perf_iterations --cell cosearch --smoke
+
+# Verdict-regression gate: diff benchmarks/artifacts/*.json against the
+# committed baselines (benchmarks/baselines/verdicts.json); exits
+# nonzero on any confirmed→refuted transition. Rebase after an honest
+# re-run with: make bench-compare COMPARE_FLAGS=--update
+COMPARE_FLAGS ?=
+bench-compare:
+	$(PY) -m benchmarks.bench_compare $(COMPARE_FLAGS)
 
 # Backend shootout for the GA fitness hot loop (DESIGN.md §8).
 ga-fitness:
@@ -72,6 +82,11 @@ DEVICES ?= 8
 sweep-shard:
 	$(PY) -m benchmarks.perf_iterations --cell sweep_shard \
 	    --devices $(DEVICES)
+
+# Fused cross-layer co-search vs the sequential per-pass flow, with
+# dominance / bitwise-parity / gradient-seeding gates (DESIGN.md §16).
+cosearch:
+	$(PY) -m benchmarks.perf_iterations --cell cosearch
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -1,0 +1,138 @@
+"""Verdict-regression gate: diff benchmark artifacts against committed
+baselines.
+
+Every perf cell writes an artifact (``benchmarks/artifacts/*.json``)
+whose ``verdict`` string starts with ``confirmed``, ``refuted``, or
+``skipped`` (smoke artifacts carry no verdict and are ignored). This
+tool compares the artifacts in a directory against the committed
+baseline verdicts (``benchmarks/baselines/verdicts.json``) and exits
+nonzero exactly when a cell that the baseline records as *confirmed*
+now reports *refuted* — the one transition that means a perf claim this
+repo ships has regressed. Everything else (new cells, still-refuted
+cells, confirmed→skipped on hosts that can't measure the claim, e.g.
+``sweep_shard`` on a single-core container) is reported but does not
+fail the build.
+
+No jax import — the gate must run anywhere, including bare CI runners:
+
+    PYTHONPATH=src python -m benchmarks.bench_compare
+    PYTHONPATH=src python -m benchmarks.bench_compare --update  # rebase
+
+Wired as ``make bench-compare`` and run after ``bench-smoke`` in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines",
+                        "verdicts.json")
+
+#: verdict classes, by string prefix (cells compose free-text detail
+#: after the class word, e.g. ``"skipped (no physical parallelism: ...)"``)
+CLASSES = ("confirmed", "refuted", "skipped")
+
+
+def classify(verdict: str | None) -> str:
+    """Map a cell's free-text verdict to its class by prefix;
+    ``"unknown"`` for anything unclassifiable (missing, empty, or not
+    starting with a class word)."""
+    if not isinstance(verdict, str):
+        return "unknown"
+    for c in CLASSES:
+        if verdict.startswith(c):
+            return c
+    return "unknown"
+
+
+def collect(art_dir: str) -> dict[str, str]:
+    """``{cell-name: verdict-string}`` for every non-smoke artifact in
+    ``art_dir`` that carries a verdict. Smoke artifacts (``*_smoke``)
+    never carry verdicts and are skipped by name; unreadable files are
+    reported to stderr and skipped (a corrupt artifact must not mask a
+    regression elsewhere)."""
+    out: dict[str, str] = {}
+    for fname in sorted(os.listdir(art_dir)):
+        if not fname.endswith(".json") or fname.endswith("_smoke.json"):
+            continue
+        path = os.path.join(art_dir, fname)
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"bench_compare: unreadable artifact {fname}: {e}",
+                  file=sys.stderr)
+            continue
+        if isinstance(data, dict) and "verdict" in data:
+            out[fname[:-len(".json")]] = data["verdict"]
+    return out
+
+
+def compare(baseline: dict[str, str], current: dict[str, str]
+            ) -> tuple[list[str], list[str]]:
+    """(regressions, notes): ``regressions`` lists confirmed→refuted
+    transitions — the failing class; ``notes`` narrates every other
+    difference (new cell, vanished cell, any other class change)."""
+    regressions, notes = [], []
+    for cell in sorted(set(baseline) | set(current)):
+        b, c = baseline.get(cell), current.get(cell)
+        bc, cc = classify(b), classify(c)
+        if cell not in current:
+            notes.append(f"{cell}: no artifact (baseline {bc})")
+        elif cell not in baseline:
+            notes.append(f"{cell}: new cell ({cc})")
+        elif bc == "confirmed" and cc == "refuted":
+            regressions.append(f"{cell}: confirmed -> refuted ({c!r})")
+        elif bc != cc:
+            notes.append(f"{cell}: {bc} -> {cc}")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--artifacts", default=ART,
+                    help="artifact directory to audit (default: "
+                         "benchmarks/artifacts)")
+    ap.add_argument("--baseline", default=BASELINE,
+                    help="committed verdict baseline (default: "
+                         "benchmarks/baselines/verdicts.json)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current "
+                         "artifacts instead of comparing")
+    args = ap.parse_args(argv)
+
+    current = collect(args.artifacts)
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"bench_compare: baseline updated "
+              f"({len(current)} cells) -> {args.baseline}")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"bench_compare: no baseline at {args.baseline}; run "
+              f"with --update to create one", file=sys.stderr)
+        return 2
+
+    regressions, notes = compare(baseline, current)
+    for n in notes:
+        print(f"bench_compare: note: {n}")
+    if regressions:
+        for r in regressions:
+            print(f"bench_compare: REGRESSION: {r}", file=sys.stderr)
+        return 1
+    print(f"bench_compare: OK ({len(current)} artifacts vs "
+          f"{len(baseline)} baseline cells, no confirmed->refuted)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,28 +6,33 @@ collection congestion + flattening memory-latency non-uniformity);
 pipelining adds further latency gains on top.
 
 Grid driving (benchmarks/README.md): LS references come from the batched
-sweep; the (workload × ablation-variant) GA searches run island-batched
-through ``sweep.solve_grid`` (plain-mesh and diagonal-link variants share
-a shape signature, so both land in one compiled call per workload shape;
-DESIGN.md §10); the same ablation grid is solved by the batched lattice
-MIQP engine through ``sweep.solve_grid(method="miqp")`` (DESIGN.md §12 —
-the same shape sharing applies); pipelining is layered on the
-diagonal-link GA result through the batched ``sweep.pipeline_sweep``
-(DESIGN.md §13).
+sweep; partition × diagonal-links × pipeline-segmentation are searched
+JOINTLY by the fused co-search (``sweep.cosearch_sweep``, DESIGN.md §16
+— the link config and segment boundaries are genes, so the old
+GA-per-link-variant grid and the separate ``pipeline_sweep`` layering
+pass collapse into one batched Pareto-front call). The cumulative
+ablation readings (partition → +diagonal → +pipelining) come from
+re-scoring the joint genome with each feature switched off — same
+feature axes as before, one search instead of three passes. The MIQP
+ablation grid is unchanged: batched lattice solves through
+``sweep.solve_grid(method="miqp")`` (DESIGN.md §12), polish + one
+batched scoring sweep.
 """
 from __future__ import annotations
 
 import time
 
-from repro.core import EvalOptions, Evaluator, make_hw, refine_schedule, sweep
-from repro.core.ga import GAConfig
+from repro.core import (CoSearchConfig, EvalOptions, make_hw,
+                        refine_schedule, sweep)
 from repro.core.miqp import MIQPConfig
-from repro.core.sweep import PipelinePoint
 from repro.graphs import WORKLOADS
 
 from .common import emit, save_json
 
-GA_CFG = GAConfig(generations=60, population=64)
+# population/generation budget matches the old per-variant GA_CFG
+# (GAConfig(generations=60, population=64)) — the co-search covers both
+# link variants AND segmentation inside that same budget.
+CO_CFG = CoSearchConfig(generations=60, population=64, batch=4)
 MIQP_CFG = MIQPConfig()        # engine="auto" → batched lattice solves
 MIQP_SOLVE_OPTS = EvalOptions(redistribution=True, async_exec=False)
 
@@ -46,31 +51,44 @@ def main(fast: bool = False, backend: str = "jax"):
         backend=backend)
     base = {w: r["latency"] for w, r in zip(wnames, base_recs)}
 
-    # variant axis: partitioning only (plain mesh) vs + diagonal links —
-    # same shapes, so the GA searches batch as islands per workload.
+    # ---- fused co-search (DESIGN.md §16): ONE batched Pareto-front
+    # call per workload shape covers what used to be the GA-per-link-
+    # variant grid plus the pipelining pass — link config and segment
+    # boundaries are genes.
+    t0 = time.perf_counter()
+    co_recs = sweep.cosearch_sweep(
+        [sweep.EvalPoint(tasks[w], hw_plain, opts) for w in wnames],
+        "latency", CO_CFG, backend=backend)
+    us = (time.perf_counter() - t0) * 1e6
+    emit("fig13/cosearch/sweep_total", us, f"{len(wnames)} points")
+    co = dict(zip(wnames, co_recs))
+
+    # cumulative ablation readings, re-scored from the ONE joint genome:
+    # partition-only = the genome's partition on the plain mesh,
+    # +diagonal = same partition on its chosen mesh, +pipelining = the
+    # full joint result (its latency already includes the batch-4
+    # pipelined makespan of its chosen segmentation).
+    ab_pts = []
+    for w in wnames:
+        r = co[w]
+        hw_best = hw_diag if r.diagonal else hw_plain
+        ab_pts.append(sweep.EvalPoint(tasks[w], hw_plain, opts,
+                                      partition=r.partition,
+                                      redist_mask=r.redist_mask))
+        ab_pts.append(sweep.EvalPoint(tasks[w], hw_best, opts,
+                                      partition=r.partition,
+                                      redist_mask=r.redist_mask))
+    ab_recs = sweep.eval_sweep(ab_pts, backend=backend)
+    ablate = {w: (ab_recs[2 * i]["latency"], ab_recs[2 * i + 1]["latency"])
+              for i, w in enumerate(wnames)}
+
+    # ---- MIQP on the ablation grid (DESIGN.md §12): batched
+    # lattice solves (plain + diagonal variants share shape signatures,
+    # so they land in one compiled call per workload shape), then
+    # polish + one batched scoring sweep — the optimize(method="miqp")
+    # pipeline.
     variants = ("partition_only", "plus_diagonal")
     pts_grid = sweep.grid(wname=wnames, variant=variants)
-    pts = [sweep.EvalPoint(
-               tasks[p["wname"]],
-               hw_plain if p["variant"] == "partition_only" else hw_diag,
-               opts)
-           for p in pts_grid]
-    t0 = time.perf_counter()
-    recs = sweep.solve_grid(pts, "latency", GA_CFG, backend=backend)
-    us = (time.perf_counter() - t0) * 1e6
-    # one batched solve call for the whole variant grid — the wall time
-    # belongs to the call, not to any single point.
-    emit("fig13/ga/solve_grid_total", us, f"{len(pts)} points")
-    ga_out = {}
-    for p, r in zip(pts_grid, recs):
-        w, v = p["wname"], p["variant"]
-        ga_out[(w, v)] = r
-        emit(f"fig13/{w}/{v}", 0.0, f"{base[w] / r.objective:.3f}x")
-
-    # ---- MIQP on the same ablation grid (DESIGN.md §12): batched
-    # lattice solves (plain + diagonal variants share shape signatures,
-    # exactly like the GA islands), then polish + one batched scoring
-    # sweep — the optimize(method="miqp") pipeline.
     mi_pts = [sweep.EvalPoint(
                   tasks[p["wname"]],
                   hw_plain if p["variant"] == "partition_only" else hw_diag,
@@ -95,25 +113,31 @@ def main(fast: bool = False, backend: str = "jax"):
         mi_out[(w, v)] = base[w] / rec["latency"]
         emit(f"fig13/{w}/{v}/miqp", 0.0, f"{mi_out[(w, v)]:.3f}x")
 
-    # Pipelining on top of the diagonal-link GA result: all workloads'
-    # batch-4 instances through one batched pipeline_sweep (§13).
-    segs = {}
+    # ---- readings: cumulative feature speedups from the joint genome
+    # + the full Pareto front per workload (EDP × latency × energy rows
+    # with per-row link/segmentation genes).
     for wname in wnames:
-        ga2 = ga_out[(wname, "plus_diagonal")]
-        ev = Evaluator(tasks[wname], hw_diag, opts, backend=backend)
-        segs[wname] = ev.evaluate(ga2.partition, ga2.redist_mask).segments()
-    pipes = sweep.pipeline_sweep(
-        [PipelinePoint(segs[w], 4) for w in wnames], backend=backend)
-    for wname, pipe in zip(wnames, pipes):
-        ga2 = ga_out[(wname, "plus_diagonal")]
-        part_sp = base[wname] / ga_out[(wname, "partition_only")].objective
-        diag_sp = base[wname] / ga2.objective
-        pipe_sp = base[wname] / (pipe.pipelined / 4)
+        r = co[wname]
+        lat_plain, lat_best = ablate[wname]
+        part_sp = base[wname] / lat_plain
+        diag_sp = base[wname] / lat_best
+        pipe_sp = base[wname] / r.latency
         results[wname] = {"partition": part_sp, "diag": diag_sp,
                           "pipe": pipe_sp,
+                          "cosearch_diag": bool(r.diagonal),
+                          "cosearch_segments":
+                              int(r.seg_mask.sum()) + 1,
+                          "front": {
+                              "edp": r.front["edp"].tolist(),
+                              "latency": r.front["latency"].tolist(),
+                              "energy": r.front["energy"].tolist(),
+                              "diag": r.front["diag"].tolist(),
+                          },
                           "miqp_partition": mi_out[(wname,
                                                     "partition_only")],
                           "miqp_diag": mi_out[(wname, "plus_diagonal")]}
+        emit(f"fig13/{wname}/partition_only", 0.0, f"{part_sp:.3f}x")
+        emit(f"fig13/{wname}/plus_diagonal", 0.0, f"{diag_sp:.3f}x")
         emit(f"fig13/{wname}/plus_pipelining", 0.0, f"{pipe_sp:.3f}x")
     save_json("fig13", results)
 

@@ -60,6 +60,16 @@ host into N virtual XLA devices before jax initializes; sweep_shard
 defaults to 8:
     PYTHONPATH=src python -m benchmarks.perf_iterations \\
         --cell sweep_shard --devices 8
+
+The ``cosearch`` cell benchmarks the fused cross-layer co-search
+(DESIGN.md §16) on the fig13 grid: the sequential per-pass flow (GA
+partition search per link variant → pick the better mesh → pipeline the
+winner's segments) vs ONE batched Pareto-front ``cosearch_sweep``, with
+a per-point dominance gate (co-search best-EDP ≤ the sequential flow's
+EDP), a solo==batched bitwise parity gate, and a gradient-seeding gate
+(seeded search reaches the cold-start best in ≤ half the generations,
+counted deterministically — never wall-clock):
+    PYTHONPATH=src python -m benchmarks.perf_iterations --cell cosearch
 """
 import argparse
 import json
@@ -159,7 +169,10 @@ def main():
                          "coalescing OptServer + bitwise parity gate, "
                          "DESIGN.md §14) | sweep_shard (sharded sweep "
                          "fabric: single-device vs shard_map sweeps + "
-                         "bitwise parity gate, DESIGN.md §15)")
+                         "bitwise parity gate, DESIGN.md §15) | cosearch "
+                         "(fused cross-layer co-search vs the sequential "
+                         "GA→link→pipeline pass flow + dominance/parity/"
+                         "seeding gates, DESIGN.md §16)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny populations/generations — the no-regression "
                          "smoke profile used by `make bench-smoke`")
@@ -188,6 +201,9 @@ def main():
         return
     if args.cell == "sweep_shard":
         run_sweep_shard(smoke=args.smoke)
+        return
+    if args.cell == "cosearch":
+        run_cosearch(smoke=args.smoke)
         return
     from repro.launch import dryrun  # noqa: F401 -- sets the 512-device
     from repro.launch.mesh import make_production_mesh  # XLA_FLAGS first
@@ -938,12 +954,20 @@ def run_sweep_shard(smoke: bool = False):
            "single_s": times["single"], "sharded_s": times["sharded"],
            "speedup": speedup, "parity_ok": parity_ok}
     if not smoke:
-        ok = speedup >= 2.0 and parity_ok
-        out["verdict"] = ("confirmed (>=2x sharded end-to-end, "
-                          "single==sharded bitwise)" if ok else
-                          ("refuted (virtual devices share "
-                           f"{cores} physical core(s))"
-                           if parity_ok and cores < 2 else "refuted"))
+        # The >=2x wall-clock bar only means something when real cores
+        # back the shards: N virtual XLA devices carved from one core
+        # time-slice it, so a single-core container can never confirm
+        # OR refute the speedup claim — it reports skipped. The bitwise
+        # parity gate above still ran (and exits nonzero on violation).
+        if parity_ok and cores < 2:
+            out["verdict"] = ("skipped (no physical parallelism: "
+                              f"{n_dev} virtual devices share "
+                              f"{cores} physical core(s); parity OK)")
+        elif speedup >= 2.0 and parity_ok:
+            out["verdict"] = ("confirmed (>=2x sharded end-to-end, "
+                              "single==sharded bitwise)")
+        else:
+            out["verdict"] = "refuted"
         print(f"[perf] sweep_shard -> {out['verdict']}")
     os.makedirs(ART, exist_ok=True)
     name = "sweep_shard_smoke.json" if smoke else "sweep_shard.json"
@@ -953,6 +977,214 @@ def run_sweep_shard(smoke: bool = False):
         # A sharded result that differs from its single-device result
         # breaks the §15 contract — fail the smoke/CI gate loudly.
         raise SystemExit("sweep_shard: sharded result != single result")
+
+
+def run_cosearch(smoke: bool = False):
+    """Fused cross-layer co-search shootout (DESIGN.md §16).
+
+    Times the fig13 grid two ways — the sequential per-pass flow the
+    figure scripts used before, and ONE batched Pareto-front
+    ``sweep.cosearch_sweep``. The sequential flow must produce what the
+    migrated fig12/fig13 consume from the front — the best-latency AND
+    the best-EDP operating points — so per workload it runs, per
+    objective (latency, edp): one GA partition search per link variant
+    [plain mesh, diagonal mesh], picks the better variant, evaluates
+    it, and pipelines its segments at batch 4 (the GA →
+    link-ablation → pipeline pass sequence, once per objective). The
+    co-search leg is one ``cosearch_sweep`` call: links and
+    segmentation are genes, and the Pareto archive returns both
+    operating points from a single EDP-guided search. Both legs run
+    ``cache=False`` and are timed warm, so the gap is search structure,
+    not compilation.
+
+    Three gates ride the timing:
+
+    * **Dominance** — co-search best-EDP must be ≤ the sequential
+      flow's EDP-pass result on EVERY grid point (same metric on both
+      sides: ``energy × pipelined-latency`` at batch 4). The joint
+      search may not trade its speed for schedule quality.
+    * **Parity** — a solo ``run_cosearch`` must equal the batched sweep
+      record BITWISE (the §9 solo==batched contract); any divergence
+      exits nonzero.
+    * **Seeding** — projected-gradient seeding must measurably help: the
+      seeded search must reach the cold-start search's best fitness in
+      ≤ half the generations (deterministic generation counts from the
+      returned histories — never wall-clock).
+
+    Acceptance bar: ≥3× end-to-end plus all three gates. ``smoke=True``
+    shrinks budgets to a seconds-long no-regression check
+    (`make bench-smoke`), skips the speedup/seeding verdicts (keeps both
+    correctness gates), and writes ``cosearch_smoke.json``."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core import EvalOptions, Evaluator, make_hw, sweep
+    from repro.core import cosearch as cs
+    from repro.core.ga import GAConfig
+    from repro.core.sweep import PipelinePoint
+    from repro.graphs import WORKLOADS
+
+    B = 4
+    if smoke:
+        wnames = ("alexnet",)
+        pop, gens = 16, 8
+        co_cfg = cs.CoSearchConfig(population=pop, generations=gens,
+                                   patience=gens, batch=B, seed=0,
+                                   seed_steps=8, seed_starts=2)
+        ga_cfg = GAConfig(population=pop, generations=gens, patience=gens,
+                          seed=0)
+    else:
+        wnames = ("alexnet", "vit", "hydranet")
+        gens = 60
+        # seeding converges in a handful of generations (the seeding
+        # gate below pins that), so the joint search can afford a tight
+        # early-stop patience at a slightly smaller population.
+        co_cfg = cs.CoSearchConfig(population=48, generations=gens,
+                                   patience=8, batch=B, seed=0,
+                                   seed_steps=32, seed_starts=4)
+        # the fig13 GA budget (GA_CFG there): population 64, full
+        # generations, default early-stop patience
+        ga_cfg = GAConfig(population=64, generations=gens, seed=0)
+    tasks = {w: WORKLOADS[w](batch=1) for w in wnames}
+    hw_plain = make_hw("A", 4, "hbm")
+    hw_diag = make_hw("A", 4, "hbm", diagonal_links=True)
+    opts = EvalOptions(redistribution=True, async_exec=True)
+
+    def sequential_leg():
+        """The pre-§16 flow: per workload, per objective consumed by
+        the figures (latency, edp), a GA partition pass per link
+        variant → keep the better link config → score → pipeline."""
+        out = {}
+        for w in wnames:
+            out[w] = {}
+            for obj in ("latency", "edp"):
+                best_r, best_hw = None, None
+                for hw in (hw_plain, hw_diag):
+                    r = sweep.solve_grid(
+                        [sweep.EvalPoint(tasks[w], hw, opts)], obj,
+                        ga_cfg, cache=False)[0]
+                    if best_r is None or r.objective < best_r.objective:
+                        best_r, best_hw = r, hw
+                ev = Evaluator(tasks[w], best_hw, opts, backend="jax")
+                res = ev.evaluate(best_r.partition, best_r.redist_mask)
+                pipe = sweep.pipeline_sweep(
+                    [PipelinePoint(res.segments(), B)], cache=False)[0]
+                lat = pipe.pipelined / B
+                out[w][obj] = {
+                    "edp": res.energy * lat, "latency": lat,
+                    "energy": res.energy,
+                    "diagonal": best_hw is hw_diag,
+                    "ga_generations": 2 * len(best_r.history)}
+        return out
+
+    def cosearch_leg():
+        recs = sweep.cosearch_sweep(
+            [sweep.EvalPoint(tasks[w], hw_plain, opts) for w in wnames],
+            "edp", co_cfg, cache=False)
+        return dict(zip(wnames, recs))
+
+    sequential_leg()                             # warm the executables
+    cosearch_leg()
+    t0 = time.perf_counter()
+    seq = sequential_leg()
+    seq_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    co = cosearch_leg()
+    co_s = time.perf_counter() - t0
+    speedup = seq_s / co_s
+
+    # -- dominance gate: joint best-EDP <= the sequential EDP-pass
+    #    result, every point. The front's min-latency row vs the
+    #    latency pass is reported alongside (the same call serves both
+    #    figure readings) but only EDP is gated — the archive is
+    #    EDP-guided.
+    rows, dominance_ok = [], True
+    for w in wnames:
+        seq_edp = seq[w]["edp"]["edp"]
+        leq = co[w].edp <= seq_edp * (1 + 1e-9)
+        dominance_ok &= leq
+        rows.append({
+            "workload": w, "sequential_edp": seq_edp,
+            "cosearch_edp": co[w].edp, "cosearch_leq": leq,
+            "sequential_latency": seq[w]["latency"]["latency"],
+            "cosearch_front_latency": float(co[w].front["latency"].min()),
+            "sequential_diag": seq[w]["edp"]["diagonal"],
+            "cosearch_diag": bool(co[w].diagonal),
+            "front_size": int(len(co[w].front["edp"])),
+            "cosearch_generations": int(len(co[w].history)),
+        })
+        print(f"[perf] cosearch {w}: seq_edp={seq_edp:.4e} "
+              f"co_edp={co[w].edp:.4e} leq={leq} "
+              f"front={len(co[w].front['edp'])}", flush=True)
+
+    # -- bitwise parity gate (solo == batched, §9)
+    solo = cs.run_cosearch(tasks[wnames[0]], hw_plain, "edp", opts, co_cfg)
+    b = co[wnames[0]]
+    parity_ok = (solo.objective == b.objective
+                 and np.array_equal(solo.partition.Px, b.partition.Px)
+                 and np.array_equal(solo.partition.Py, b.partition.Py)
+                 and solo.diagonal == b.diagonal
+                 and np.array_equal(solo.seg_mask, b.seg_mask)
+                 and all(np.array_equal(solo.front[k], b.front[k])
+                         for k in solo.front))
+
+    # -- seeding gate: deterministic generation counts, measured at the
+    #    fig13 reference budget (population 64, patience 12 — the
+    #    tuned perf-leg budget early-stops too fast to resolve
+    #    first-attainment) on the workload whose landscape is
+    #    non-trivial (alexnet; vit/hydranet reach their optimum in
+    #    generation 1 either way). ``cold_first`` = first generation
+    #    the cold start attains its final best; the seeded search must
+    #    attain that same fitness in <= half as many generations.
+    seed_cfg = co_cfg if smoke else dataclasses.replace(
+        co_cfg, population=64, patience=12)
+    t_seed, hw_seed = tasks[wnames[0]], hw_plain
+    cold = cs.cosearch_islands([t_seed], [hw_seed], opts, "edp",
+                               seed_cfg, seeds=[[]])[0]
+    seeded = cs.cosearch_islands([t_seed], [hw_seed], opts, "edp",
+                                 seed_cfg)[0]
+    tol = cold.objective * (1 + 1e-12)
+    cold_first = int(np.nonzero(cold.history <= tol)[0][0]) + 1
+    reach = np.nonzero(seeded.history <= tol)[0]
+    gens_to_reach = int(reach[0]) + 1 if reach.size else None
+    seeding_ok = (gens_to_reach is not None
+                  and 2 * gens_to_reach <= cold_first)
+
+    print(f"[perf] cosearch grid={len(wnames)} points: "
+          f"sequential={seq_s:.2f}s cosearch={co_s:.2f}s "
+          f"speedup={speedup:.2f}x | dominance="
+          f"{'OK' if dominance_ok else 'FAIL'} "
+          f"parity={'OK' if parity_ok else 'FAIL'} | seeded reached "
+          f"cold best in {gens_to_reach} generations vs cold's "
+          f"{cold_first}")
+    out = {"points": len(wnames), "sequential_s": seq_s,
+           "cosearch_s": co_s, "speedup": speedup,
+           "dominance_ok": dominance_ok, "parity_ok": parity_ok,
+           "seeded_generations_to_cold_best": gens_to_reach,
+           "cold_generations_to_best": cold_first,
+           "seeding_ok": seeding_ok,
+           "rows": rows}
+    if not smoke:
+        ok = speedup >= 3.0 and dominance_ok and parity_ok and seeding_ok
+        out["verdict"] = ("confirmed (>=3x fused, co-EDP <= sequential "
+                          "everywhere, solo==batched bitwise, seeded "
+                          "<= half the generations)" if ok else "refuted")
+        print(f"[perf] cosearch -> {out['verdict']}")
+    os.makedirs(ART, exist_ok=True)
+    name = "cosearch_smoke.json" if smoke else "cosearch.json"
+    with open(os.path.join(ART, name), "w") as f:
+        json.dump(out, f, indent=1)
+    if not parity_ok:
+        # A batched record that differs from its solo equivalent breaks
+        # the §9 contract — fail the smoke/CI gate loudly.
+        raise SystemExit("cosearch: batched record != solo record")
+    if not dominance_ok:
+        # The joint search losing to the pass sequence on its own
+        # objective is a correctness property of the search space (the
+        # sequential solutions are representable genomes) — fail loudly.
+        raise SystemExit("cosearch: joint search worse than the "
+                         "sequential per-pass flow on >=1 point")
 
 
 def run_smollm(mesh):

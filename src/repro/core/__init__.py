@@ -27,10 +27,18 @@ Layers:
     vectorized max-min waterfilling engine + event-driven reference;
     :mod:`repro.core.netsim_jax` — the jitted batched port, also traced
     by the evaluator's ``congestion="flow"`` mode.
+  * :mod:`repro.core.cosearch` — fused cross-layer co-search
+    (DESIGN.md §16): one jitted genome spanning partition × diagonal
+    links × pipeline segmentation, gradient-guided seeding, batched
+    Pareto archive; wired as :func:`repro.core.sweep.cosearch_sweep`.
   * :mod:`repro.core.api` — one-call front door.
 """
 from .api import (ScheduleResult, baseline_result, optimize,  # noqa: F401
                   refine_schedule)
+# NB: the joint-search front door is ``api.cosearch`` — the name
+# ``repro.core.cosearch`` stays bound to the submodule.
+from .cosearch import (CoSearchConfig, CoSearchResult,  # noqa: F401
+                       run_cosearch)
 from .evaluator import (AUTO_POPULATION_THRESHOLD, BACKENDS,  # noqa: F401
                         CONGESTION_MODES, EvalOptions, EvalResult,
                         Evaluator, resolve_auto_backend)
@@ -41,6 +49,6 @@ from .miqp import (MIQPConfig, MIQPResult, run_miqp,  # noqa: F401
 from .pipelining import (PIPELINE_ENGINES, PipelineConfig,  # noqa: F401
                          PipelineResult, pipeline_batch,
                          resolve_auto_pipeline_engine)
-from .sweep import (EvalPoint, PipelinePoint, eval_sweep,  # noqa: F401
-                    pipeline_sweep, solve_grid)
+from .sweep import (EvalPoint, PipelinePoint, cosearch_sweep,  # noqa: F401
+                    eval_sweep, pipeline_sweep, solve_grid)
 from .workload import GemmOp, Partition, Task, uniform_partition  # noqa: F401

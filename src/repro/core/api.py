@@ -23,7 +23,7 @@ from .sweep import EvalPoint, eval_sweep
 from .workload import Partition, Task, uniform_partition
 
 __all__ = ["ScheduleResult", "optimize", "baseline_result",
-           "refine_schedule", "METHODS"]
+           "refine_schedule", "cosearch", "METHODS"]
 
 METHODS = ("baseline", "simba", "ga", "miqp")
 
@@ -283,3 +283,32 @@ def optimize(
     return ScheduleResult(method, objective, part, rd, res, base, dt,
                           task=task, hw_used=hw_used, options=opts,
                           backend=scoring_backend)
+
+
+def cosearch(
+    task: Task,
+    hw: HWConfig,
+    objective: str = "edp",
+    options: EvalOptions | None = None,
+    cfg=None,
+    cache: bool = True,
+    devices: str | None = None,
+):
+    """One-call front door for the fused joint search (DESIGN.md §16):
+    partition × diagonal links × pipeline segmentation scored end-to-end
+    in one jitted fitness. Returns a
+    :class:`repro.core.cosearch.CoSearchResult` — the best genome on
+    ``objective`` plus the batched Pareto front over (EDP, latency,
+    energy). Unlike :func:`optimize`, the link configuration is *part of
+    the genome* (``hw.diagonal_links`` is ignored), and the pipeline
+    schedule is searched jointly instead of refined afterwards.
+
+    Routes through :func:`repro.core.sweep.cosearch_sweep`, so results
+    land in (and are served from) the §9 cache under the ``"cosearch"``
+    method tag; ``cfg`` defaults to
+    :class:`repro.core.cosearch.CoSearchConfig()`."""
+    from .sweep import cosearch_sweep
+
+    opts = options or EvalOptions(redistribution=True, async_exec=True)
+    return cosearch_sweep([EvalPoint(task, hw, opts)], objective=objective,
+                          cfg=cfg, cache=cache, devices=devices)[0]

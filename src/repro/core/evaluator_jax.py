@@ -107,13 +107,21 @@ def consts_from_evaluator(ev) -> EvalConsts:
 
 def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
                  redistribution: bool, async_exec: bool, energy_mode: str,
-                 congestion: str = "regime"):
+                 congestion: str = "regime", smooth: bool = False):
     """One candidate: Px [n,X], Py [n,Y], collectors [n], redist [n].
 
     Line-for-line port of ``Evaluator.evaluate_batch`` with the population
     axis removed (vmap adds it back). Static python ints n/X/Y come from
     the traced shapes; R/C/bandwidths stay traced so compilations are
     shared across HWConfigs of equal shape.
+
+    ``smooth=True`` replaces the ``ceil(P/unit)`` tile counts — zero
+    gradient almost everywhere — with their continuous relaxation
+    ``P/unit``, making the whole objective reverse-differentiable for
+    the projected-gradient seeding of :mod:`repro.core.cosearch`
+    (DESIGN.md §16). Only the ``congestion="regime"`` path is
+    differentiable (the flow netsim's waterfilling ``while_loop`` has no
+    reverse rule); search/scoring always runs ``smooth=False``.
     """
     n, X = Px.shape
     Y = Py.shape[1]
@@ -175,7 +183,10 @@ def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
 
     # -------------------------------------------------- phase 2: compute
     fill = (2.0 * R + C + K - 2.0)[:, None, None]
-    tiles = jnp.ceil(Px / R)[:, :, None] * jnp.ceil(Py / C)[:, None, :]
+    if smooth:
+        tiles = (Px / R)[:, :, None] * (Py / C)[:, None, :]
+    else:
+        tiles = jnp.ceil(Px / R)[:, :, None] * jnp.ceil(Py / C)[:, None, :]
     cyc = fill * tiles
     cyc = cyc + c["epilogue"][:, None, None] * Px[:, :, None] \
         * Py[:, None, :] / C

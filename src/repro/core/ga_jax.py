@@ -214,6 +214,7 @@ def solve_islands(
     objective: str,
     cfg,
     devices: str | None = None,
+    seeds: Sequence[Sequence[Partition]] | None = None,
 ) -> list:
     """Evolve one GA search per (task, hw) island through a single
     compiled call. All islands must share a shape signature (n_ops, X, Y,
@@ -226,7 +227,16 @@ def solve_islands(
     hyperparams and the per-generation keys replicate (keys are shared
     across islands by construction, so a shard sees exactly the draws a
     solo run would). Results are bitwise identical to the single-device
-    path."""
+    path.
+
+    ``seeds`` (optional, per island) warm-starts the search: island
+    ``g``'s population rows ``1..`` are overwritten with the given
+    :class:`Partition` proposals (row 0 keeps the uniform baseline, so a
+    seeded run can never start worse than a cold one). Collector /
+    redistribution genes of a seeded row keep row 0's values — seeds
+    speak only to the partition lattice (e.g. the projected-gradient
+    proposals of :func:`repro.core.cosearch.gradient_seeds`, DESIGN.md
+    §16). ``seeds=None`` preserves the cold-start init bit-for-bit."""
     from . import sweep_shard
     from .ga import GAResult, _random_population_vec
 
@@ -254,6 +264,15 @@ def solve_islands(
         # point's result never depends on its position in the grid).
         inits.append(_random_population_vec(
             np.random.default_rng(cfg.seed), t, h, cfg, pop))
+    if seeds is not None:
+        if len(seeds) != G:
+            raise ValueError(f"seeds must align with islands: "
+                             f"{len(seeds)} != {G}")
+        for g, props in enumerate(seeds):
+            Px0, Py0 = inits[g][0], inits[g][1]
+            for j, p in enumerate(props[:pop - 1]):
+                Px0[j + 1] = p.Px
+                Py0[j + 1] = p.Py
     win = {k: np.stack(v).astype(np.float64) for k, v in win.items()}
     hp = {
         "p_crossover": float(cfg.p_crossover),

@@ -45,22 +45,42 @@ from jax import lax
 
 from .pipelining import chain_priorities
 
-__all__ = ["schedule_batch"]
+__all__ = ["schedule_batch", "sgs_instance", "chain_priorities_jnp"]
+
+
+def chain_priorities_jnp(dur_flat):
+    """Traced equivalent of :func:`repro.core.pipelining.chain_priorities`
+    (reversed cumulative sum — a chain job's critical path). Used by
+    callers that build priorities *inside* a jitted objective
+    (:mod:`repro.core.cosearch`); :func:`schedule_batch` keeps computing
+    them on host so the serial-engine bit-parity contract is pinned to
+    one accumulation order."""
+    return jnp.cumsum(dur_flat[::-1])[::-1]
 
 
 @functools.lru_cache(maxsize=None)
-def _sched_inner(L: int, B: int):
-    """Unjitted ``vmap(instance)`` per (chain length, batch) signature —
-    durations/priorities as data; doubles as the shard_map target of the
-    sharded sweep fabric (DESIGN.md §15)."""
+def sgs_instance(L: int, B: int, with_starts: bool = True):
+    """Traced single-instance SGS per (chain length, batch) signature:
+    ``one(dur [L], prio [L])`` → ``(makespan, starts [B, L])``, or just
+    the makespan with ``with_starts=False`` (skips the per-step start
+    scatter — the form embedded in fused objectives such as the
+    co-search fitness, DESIGN.md §16). Durations/priorities are data, so
+    one instance serves every same-shape schedule; cached so wrappers
+    (vmap/jit/shard_map) key on a stable function identity."""
     # Chain resource pattern (in, comp, out) per op: 0 = comm, 1 = comp.
-    res = jnp.asarray(np.tile(np.array([0, 1, 0], dtype=np.int32),
-                              L // 3))
-    sample_base = jnp.arange(B, dtype=jnp.int32) * L
+    # Held as numpy and lifted per trace — the instance may be *built*
+    # inside an enclosing trace (the co-search fused fitness), and a
+    # cached closure over trace-born jnp arrays would leak tracers into
+    # later traces.
+    res_np = np.tile(np.array([0, 1, 0], dtype=np.int32), L // 3)
+    base_np = np.arange(B, dtype=np.int32) * L
 
     def one(dur, prio):
+        res = jnp.asarray(res_np)
+        sample_base = jnp.asarray(base_np)
+
         def step(_, state):
-            ptr, ready, free, starts = state
+            ptr, ready, free = state[:3]
             active = ptr < L
             pr = jnp.where(active, prio[jnp.minimum(ptr, L - 1)], -jnp.inf)
             # Highest-priority ready job; ties resolve to the smallest
@@ -72,19 +92,33 @@ def _sched_inner(L: int, B: int):
             r = res[p]
             t0 = jnp.maximum(ready[s], free[r])
             t1 = t0 + dur[p]
-            return (ptr.at[s].add(1), ready.at[s].set(t1),
-                    free.at[r].set(t1), starts.at[s, p].set(t0))
+            out = (ptr.at[s].add(1), ready.at[s].set(t1),
+                   free.at[r].set(t1))
+            if with_starts:
+                out = out + (state[3].at[s, p].set(t0),)
+            return out
 
         init = (jnp.zeros(B, dtype=jnp.int32),
                 jnp.zeros(B, dtype=jnp.float64),
-                jnp.zeros(2, dtype=jnp.float64),
-                jnp.zeros((B, L), dtype=jnp.float64))
-        _, _, free, starts = lax.fori_loop(0, B * L, step, init)
+                jnp.zeros(2, dtype=jnp.float64))
+        if with_starts:
+            init = init + (jnp.zeros((B, L), dtype=jnp.float64),)
+        state = lax.fori_loop(0, B * L, step, init)
         # Resource frees only ever ratchet up to the latest finish, so
         # the makespan is their max (0.0 when no job ran — serial init).
-        return jnp.max(free), starts
+        if with_starts:
+            return jnp.max(state[2]), state[3]
+        return jnp.max(state[2])
 
-    return jax.vmap(one)
+    return one
+
+
+@functools.lru_cache(maxsize=None)
+def _sched_inner(L: int, B: int):
+    """Unjitted ``vmap(instance)`` per (chain length, batch) signature —
+    durations/priorities as data; doubles as the shard_map target of the
+    sharded sweep fabric (DESIGN.md §15)."""
+    return jax.vmap(sgs_instance(L, B))
 
 
 @functools.lru_cache(maxsize=None)

@@ -80,6 +80,7 @@ from .workload import Partition, Task, uniform_partition
 __all__ = [
     "EvalPoint",
     "PipelinePoint",
+    "cosearch_sweep",
     "eval_sweep",
     "grid",
     "run_grid",
@@ -586,12 +587,27 @@ def _solver_fingerprint(pt: EvalPoint, method: str, backend: str,
 def _copy_solver_record(rec):
     import dataclasses as _dc
 
+    from .cosearch import CoSearchResult
     from .ga import GAResult
     from .miqp import MIQPResult
     from .pipelining import PipelineResult
 
     if isinstance(rec, PipelineResult):
         return _dc.replace(rec)      # all fields immutable scalars
+    if isinstance(rec, CoSearchResult):
+        return CoSearchResult(
+            partition=rec.partition.copy(),
+            redist_mask=rec.redist_mask.copy(),
+            diagonal=rec.diagonal,
+            seg_mask=rec.seg_mask.copy(),
+            objective=rec.objective,
+            edp=rec.edp,
+            latency=rec.latency,
+            energy=rec.energy,
+            front={k: v.copy() for k, v in rec.front.items()},
+            history=rec.history.copy(),
+            evaluations=rec.evaluations,
+        )
     if isinstance(rec, MIQPResult):
         return MIQPResult(
             partition=rec.partition.copy(),
@@ -668,8 +684,13 @@ def solve_grid(
     if method == "miqp":
         return _solve_grid_miqp(points, objective, cfg, backend, cache,
                                 devices)
+    if method == "cosearch":
+        return cosearch_sweep(points, objective=objective, cfg=cfg,
+                              backend=backend, cache=cache,
+                              devices=devices)
     if method != "ga":
-        raise ValueError(f"unknown method {method!r}; one of ('ga', 'miqp')")
+        raise ValueError(f"unknown method {method!r}; "
+                         f"one of ('ga', 'miqp', 'cosearch')")
     from .evaluator import resolve_auto_backend
     from .ga import GAConfig, run_ga
 
@@ -712,6 +733,108 @@ def solve_grid(
             outs = ga_jax.solve_islands(
                 [points[i].task for i in idxs],
                 [points[i].hw for i in idxs],
+                points[idxs[0]].options, objective, cfg,
+                devices=devices)
+            for i, out in zip(idxs, outs):
+                records[i] = out
+
+    if cache:
+        for i in todo:
+            _CACHE[fps[i]] = _copy_solver_record(records[i])
+    return records
+
+
+# ------------------------------------------------- batched co-search
+def cosearch_sweep(
+    points: Sequence[EvalPoint],
+    objective: str = "edp",
+    cfg=None,
+    backend: str = "jax",
+    cache: bool = True,
+    devices: str | None = None,
+    checkpoint=None,
+    checkpoint_every: int = 8,
+    straggler=None,
+) -> list:
+    """Run one fused joint search (partition × diagonal links × pipeline
+    segmentation, DESIGN.md §16) per point; returns
+    :class:`repro.core.cosearch.CoSearchResult` records aligned with
+    ``points`` — also reachable as ``solve_grid(method="cosearch")``.
+
+    Uncached points are grouped by shape signature — (n_ops, X, Y,
+    n_entrances); the :class:`EvalOptions` statics live in the compiled
+    function's cache key — and each group evolves as islands of ONE
+    ``jit(vmap(scan))`` call
+    (:func:`repro.core.cosearch.cosearch_islands`). A point's record is
+    identical solo or batched (island RNG depends only on ``cfg.seed``,
+    budgets are deterministic counts), so the §9 cache contract holds:
+    records are method-tagged ``"cosearch"`` and keyed by the full
+    frozen :class:`CoSearchConfig`.
+
+    The diag gene *searches* the link axis, so ``pt.hw.diagonal_links``
+    is normalized to ``False`` before fingerprinting and solving — plain
+    and diagonal variants of the same mesh share one record.
+    ``pt.partition`` / ``pt.redist_mask`` are ignored, like
+    :func:`solve_grid`. Only the JAX backend exists (the fitness chains
+    traced engines end-to-end); ``backend="auto"`` resolves to it.
+
+    ``devices`` (DESIGN.md §15) shards each group's island axis —
+    result-neutral and fingerprint-invisible; ``None`` defers to
+    ``cfg.devices``. ``checkpoint`` / ``checkpoint_every`` /
+    ``straggler`` behave exactly like :func:`solve_grid`."""
+    from .cosearch import CoSearchConfig, cosearch_islands
+
+    if cfg is None:
+        cfg = CoSearchConfig()
+    if not isinstance(cfg, CoSearchConfig):
+        raise TypeError(f"cosearch_sweep needs a CoSearchConfig, "
+                        f"got {type(cfg).__name__}")
+    if backend == "auto":
+        backend = "jax"
+    if backend != "jax":
+        raise ValueError(f"unknown backend {backend!r} for cosearch; "
+                         f"the fused fitness only exists on 'jax' "
+                         f"('auto' resolves to it)")
+    ckpt = _resolve_checkpoint(checkpoint, checkpoint_every)
+    if ckpt is not None:
+        if not cache:
+            raise ValueError("checkpointing requires cache=True — "
+                             "records persist through the result cache")
+        return _checkpointed(
+            points, ckpt, straggler,
+            lambda c: cosearch_sweep(c, objective, cfg, backend=backend,
+                                     cache=True, devices=devices))
+
+    norm_hws = [dataclasses.replace(pt.hw, diagonal_links=False)
+                for pt in points]
+    records: list = [None] * len(points)
+    todo: list[int] = []
+    fps: list[tuple | None] = [None] * len(points)
+    for i, pt in enumerate(points):
+        if cache:
+            fp = _solver_fingerprint(
+                dataclasses.replace(pt, hw=norm_hws[i]),
+                "cosearch", "jax", objective, cfg)
+            fps[i] = fp
+            hit = _CACHE.get(fp)
+            if hit is not None:
+                _STATS["hits"] += 1
+                records[i] = _copy_solver_record(hit)
+                continue
+            _STATS["misses"] += 1
+        todo.append(i)
+
+    if todo:
+        groups: dict[tuple, list[int]] = {}
+        for i in todo:
+            pt = points[i]
+            sig = (len(pt.task), pt.hw.X, pt.hw.Y,
+                   pt.hw.topology.n_entrances, _strip_devices(pt.options))
+            groups.setdefault(sig, []).append(i)
+        for sig, idxs in groups.items():
+            outs = cosearch_islands(
+                [points[i].task for i in idxs],
+                [norm_hws[i] for i in idxs],
                 points[idxs[0]].options, objective, cfg,
                 devices=devices)
             for i, out in zip(idxs, outs):

@@ -3,9 +3,9 @@
 
 An optimization request is one point of the same design space the
 batched sweep engine (:mod:`repro.core.sweep`, DESIGN.md §9) already
-drives: an evaluation (``eval_sweep``), a solver search (``solve_grid``,
-GA or MIQP-lattice), or an RCPSP pipelining instance
-(``pipeline_sweep``). The server coalesces queued requests whose
+drives: an evaluation (``eval_sweep``), a solver search (``solve_grid``
+— GA, MIQP-lattice, or the fused co-search of DESIGN.md §16), or an
+RCPSP pipelining instance (``pipeline_sweep``). The server coalesces queued requests whose
 *call key* — (kind, method, objective, solver config, backend) — is
 identical into ONE sweep call; the sweep engine then shape-groups that
 call into single compiled executions and fingerprints every point into
@@ -29,6 +29,7 @@ from typing import Any
 import numpy as np
 
 from ..core import sweep
+from ..core.cosearch import CoSearchConfig
 from ..core.evaluator import EvalOptions
 from ..core.ga import GAConfig
 from ..core.miqp import MIQPConfig
@@ -38,7 +39,7 @@ __all__ = ["BadRequest", "OptRequest", "CallKey", "group_requests",
            "KINDS", "SOLVE_METHODS", "OBJECTIVES"]
 
 KINDS = ("eval", "solve", "pipeline")
-SOLVE_METHODS = ("ga", "miqp")
+SOLVE_METHODS = ("ga", "miqp", "cosearch")
 OBJECTIVES = ("latency", "energy", "edp")
 _BACKENDS = ("numpy", "jax", "auto")
 
@@ -70,7 +71,9 @@ class OptRequest:
     ``kind="eval"``     → ``point`` is a :class:`~repro.core.sweep.
     EvalPoint`, served by ``eval_sweep`` (objective/method/cfg unused).
     ``kind="solve"``    → ``point`` is an ``EvalPoint`` whose partition
-    is ignored; ``method`` picks GA or MIQP-lattice, ``cfg`` the frozen
+    is ignored; ``method`` picks GA, MIQP-lattice, or the fused
+    co-search (``"cosearch"``, DESIGN.md §16 — returns a
+    ``CoSearchResult`` with the full Pareto front), ``cfg`` the frozen
     solver config, ``objective`` the fitness.
     ``kind="pipeline"`` → ``point`` is a :class:`~repro.core.sweep.
     PipelinePoint`, served by ``pipeline_sweep`` (``cfg`` a
@@ -131,11 +134,17 @@ class OptRequest:
             if self.objective not in OBJECTIVES:
                 raise BadRequest(f"unknown objective {self.objective!r}; "
                                  f"one of {OBJECTIVES}")
-            want = {"ga": GAConfig, "miqp": MIQPConfig}[self.method]
+            want = {"ga": GAConfig, "miqp": MIQPConfig,
+                    "cosearch": CoSearchConfig}[self.method]
             if self.cfg is not None and not isinstance(self.cfg, want):
                 raise BadRequest(
                     f"cfg for method={self.method!r} must be "
                     f"{want.__name__}, got {type(self.cfg).__name__}")
+            if self.method == "cosearch" and self.backend == "numpy":
+                # The joint search is a fused traced objective — there
+                # is no host engine to serve it on.
+                raise BadRequest("method='cosearch' requires backend "
+                                 "'jax' (or 'auto'); got 'numpy'")
 
     def _validate_eval_point(self) -> None:
         pt = self.point

@@ -1,0 +1,82 @@
+"""Verdict-regression gate (benchmarks/bench_compare.py): prefix
+classification, the confirmed→refuted failing class, tolerance of
+new/skipped/missing cells, and the --update rebase path. Deliberately
+jax-free — the gate must run on bare CI runners."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.bench_compare import classify, collect, compare, main
+
+
+def _write(d, name, payload):
+    (d / name).write_text(json.dumps(payload))
+
+
+def test_classify_prefixes():
+    assert classify("confirmed (>=3x)") == "confirmed"
+    assert classify("refuted") == "refuted"
+    assert classify("skipped (no physical parallelism: 1 core)") \
+        == "skipped"
+    assert classify("") == "unknown"
+    assert classify(None) == "unknown"
+    assert classify("inconclusive") == "unknown"
+
+
+def test_collect_skips_smoke_and_verdictless(tmp_path):
+    _write(tmp_path, "a.json", {"verdict": "confirmed (fast)"})
+    _write(tmp_path, "a_smoke.json", {"verdict": "bogus"})
+    _write(tmp_path, "fig13.json", {"alexnet": {"pipe": 1.5}})
+    (tmp_path / "broken.json").write_text("{not json")
+    got = collect(str(tmp_path))
+    assert got == {"a": "confirmed (fast)"}
+
+
+def test_compare_flags_only_confirmed_to_refuted():
+    baseline = {"a": "confirmed (x)", "b": "confirmed (y)",
+                "c": "refuted", "d": "skipped (no cores)",
+                "gone": "confirmed (z)"}
+    current = {"a": "refuted",                      # the failing class
+               "b": "skipped (no cores today)",     # note only
+               "c": "confirmed (now faster)",       # improvement: note
+               "d": "skipped (still)",              # unchanged
+               "new": "confirmed (fresh)"}          # new cell: note
+    regressions, notes = compare(baseline, current)
+    assert len(regressions) == 1 and "a: confirmed -> refuted" \
+        in regressions[0]
+    joined = "\n".join(notes)
+    assert "b: confirmed -> skipped" in joined
+    assert "c: refuted -> confirmed" in joined
+    assert "new: new cell" in joined
+    assert "gone: no artifact" in joined
+    assert "d:" not in joined
+
+
+def test_main_exit_codes(tmp_path):
+    art = tmp_path / "artifacts"
+    art.mkdir()
+    base = tmp_path / "baselines" / "verdicts.json"
+    _write(art, "cell.json", {"verdict": "confirmed (fast)"})
+
+    # no baseline yet → exit 2 with guidance
+    assert main(["--artifacts", str(art), "--baseline", str(base)]) == 2
+    # --update creates it; compare then passes
+    assert main(["--artifacts", str(art), "--baseline", str(base),
+                 "--update"]) == 0
+    assert json.loads(base.read_text()) == \
+        {"cell": "confirmed (fast)"}
+    assert main(["--artifacts", str(art), "--baseline", str(base)]) == 0
+    # regression → exit 1
+    _write(art, "cell.json", {"verdict": "refuted"})
+    assert main(["--artifacts", str(art), "--baseline", str(base)]) == 1
+    # skipped is not a regression (single-core hosts)
+    _write(art, "cell.json", {"verdict": "skipped (no parallelism)"})
+    assert main(["--artifacts", str(art), "--baseline", str(base)]) == 0
+
+
+def test_no_jax_import():
+    """The gate must run on runners without the accelerator stack."""
+    import benchmarks.bench_compare as bc
+    src = open(bc.__file__).read()
+    assert "import jax" not in src and "from jax" not in src

@@ -1,0 +1,257 @@
+"""Fused cross-layer co-search invariants (DESIGN.md §16).
+
+Pins the §9-contract extension for ``method="cosearch"`` (solo ==
+batched bitwise, diag-normalized cache identity, record isolation),
+the fused-genome semantics (link config and segmentation are genes;
+``hw.diagonal_links`` never changes the record), gradient seeding
+(deterministic generation-count budgets — never wall-clock), and the
+seeding hooks grown into the GA and MIQP engines (``seeds=`` /
+``anchors=``: disabled must be bit-for-bit the pre-hook behavior).
+
+All searches share one tiny (n=4, 2×2 mesh) shape so the compiled
+executables are traced once per module run.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (CoSearchConfig, EvalOptions, Task, api, make_hw,
+                        run_cosearch, sweep)
+from repro.core import cosearch as cs
+from repro.core import ga_jax, miqp_jax
+from repro.core.ga import GAConfig
+from repro.core.miqp import MIQPConfig
+from repro.graphs import WORKLOADS
+
+HW = make_hw("A", 2, "hbm")
+HW_DIAG = make_hw("A", 2, "hbm", diagonal_links=True)
+OPTS = EvalOptions(redistribution=True, async_exec=True)
+CFG = CoSearchConfig(population=16, generations=10, patience=10,
+                     batch=3, seed=0, seed_steps=4, seed_starts=2,
+                     archive_size=8)
+
+
+def _task(name="alex4", lo=0, hi=4):
+    full = WORKLOADS["alexnet"](batch=1)
+    ops = list(full.ops[lo:hi])
+    ops[0] = dataclasses.replace(ops[0], chained=False)
+    return Task(name, ops)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    sweep.clear_cache()
+    yield
+    sweep.clear_cache()
+
+
+def _same_result(a, b):
+    assert a.objective == b.objective
+    assert a.edp == b.edp and a.latency == b.latency
+    assert a.energy == b.energy
+    assert a.diagonal == b.diagonal
+    np.testing.assert_array_equal(a.partition.Px, b.partition.Px)
+    np.testing.assert_array_equal(a.partition.Py, b.partition.Py)
+    np.testing.assert_array_equal(a.redist_mask, b.redist_mask)
+    np.testing.assert_array_equal(a.seg_mask, b.seg_mask)
+    assert set(a.front) == set(b.front)
+    for k in a.front:
+        np.testing.assert_array_equal(a.front[k], b.front[k])
+    np.testing.assert_array_equal(a.history, b.history)
+
+
+# ------------------------------------------------------- result shape
+def test_result_contract():
+    t = _task()
+    r = run_cosearch(t, HW, "edp", OPTS, CFG)
+    n = len(t)
+    assert r.partition.Px.shape == (n, HW.X)
+    assert np.all(r.partition.Px.sum(axis=1) ==
+                  [op.M for op in t.ops])
+    assert np.all(r.partition.Py.sum(axis=1) ==
+                  [op.N for op in t.ops])
+    assert r.seg_mask.shape == (n,)
+    assert not r.seg_mask[-1]            # last op never a boundary
+    assert r.objective == r.edp          # edp-guided search
+    assert r.edp == pytest.approx(r.energy * r.latency)
+    # front rows are mutually non-dominated and include the best genome
+    pts = np.stack([r.front["edp"], r.front["latency"],
+                    r.front["energy"]], axis=1)
+    assert cs.pareto_mask(pts).all()
+    assert r.front["edp"].min() == r.edp
+    assert len(r.history) == r.evaluations // CFG.population
+    assert np.all(np.diff(r.history) <= 0)   # best-so-far is monotone
+
+
+def test_objective_validation():
+    with pytest.raises(ValueError):
+        run_cosearch(_task(), HW, "throughput", OPTS, CFG)
+
+
+# ---------------------------------------------- §9: solo == batched
+def test_solo_equals_batched_bitwise():
+    ta, tb = _task("alex4a", 0, 4), _task("alex4b", 1, 5)
+    solo = [run_cosearch(ta, HW, "edp", OPTS, CFG),
+            run_cosearch(tb, HW, "edp", OPTS, CFG)]
+    batched = cs.cosearch_islands([ta, tb], [HW, HW], OPTS, "edp", CFG)
+    for s, b in zip(solo, batched):
+        _same_result(s, b)
+
+
+def test_sweep_diag_normalized_cache_identity():
+    """hw.diagonal_links is genome territory: plain-mesh and diag-mesh
+    points are ONE §9 cache record, and their results are bitwise
+    equal."""
+    t = _task()
+    r_plain = sweep.cosearch_sweep(
+        [sweep.EvalPoint(t, HW, OPTS)], "edp", CFG)[0]
+    stats0 = dict(sweep.cache_stats())
+    r_diag = sweep.cosearch_sweep(
+        [sweep.EvalPoint(t, HW_DIAG, OPTS)], "edp", CFG)[0]
+    stats1 = dict(sweep.cache_stats())
+    assert stats1["hits"] == stats0["hits"] + 1
+    _same_result(r_plain, r_diag)
+
+
+def test_solve_grid_dispatch_and_api_front_door():
+    t = _task()
+    r = sweep.cosearch_sweep([sweep.EvalPoint(t, HW, OPTS)], "edp",
+                             CFG)[0]
+    via_grid = sweep.solve_grid([sweep.EvalPoint(t, HW, OPTS)], "edp",
+                                CFG, method="cosearch")[0]
+    via_api = api.cosearch(t, HW, "edp", OPTS, CFG)
+    _same_result(r, via_grid)
+    _same_result(r, via_api)
+
+
+def test_record_mutation_isolation():
+    t = _task()
+    pt = sweep.EvalPoint(t, HW, OPTS)
+    r1 = sweep.cosearch_sweep([pt], "edp", CFG)[0]
+    r1.front["edp"][:] = -1.0
+    r1.partition.Px[:] = 0
+    r2 = sweep.cosearch_sweep([pt], "edp", CFG)[0]
+    assert np.all(r2.front["edp"] > 0)
+    assert np.all(r2.partition.Px.sum(axis=1) ==
+                  [op.M for op in t.ops])
+
+
+def test_cfg_and_backend_validation():
+    pt = sweep.EvalPoint(_task(), HW, OPTS)
+    with pytest.raises(TypeError):
+        sweep.cosearch_sweep([pt], "edp", GAConfig())
+    with pytest.raises(ValueError):
+        sweep.cosearch_sweep([pt], "edp", CFG, backend="numpy")
+
+
+def test_flow_congestion_mode():
+    opts = dataclasses.replace(OPTS, congestion="flow")
+    r = run_cosearch(_task(), HW, "edp", opts, CFG)
+    assert np.isfinite(r.edp) and r.edp > 0
+
+
+# ------------------------------------------------- gradient seeding
+def test_gradient_seeds_deterministic_and_valid():
+    t = _task()
+    s1 = cs.gradient_seeds(t, HW, OPTS, "edp", CFG)
+    s2 = cs.gradient_seeds(t, HW, OPTS, "edp", CFG)
+    assert len(s1) == len(s2) >= 1
+    for (p1, d1), (p2, d2) in zip(s1, s2):
+        np.testing.assert_array_equal(p1.Px, p2.Px)
+        np.testing.assert_array_equal(p1.Py, p2.Py)
+        assert d1 == d2
+    for p, _ in s1:
+        assert np.all(p.Px.sum(axis=1) == [op.M for op in t.ops])
+        assert np.all(p.Py.sum(axis=1) == [op.N for op in t.ops])
+
+
+def test_seeding_generation_budget():
+    """Seeding must help under a deterministic count budget: the seeded
+    search attains the cold run's final best at least as early (and
+    never ends worse). Wall-clock is not measured anywhere."""
+    t = _task()
+    cold = cs.cosearch_islands([t], [HW], OPTS, "edp", CFG,
+                               seeds=[[]])[0]
+    seeded = cs.cosearch_islands([t], [HW], OPTS, "edp", CFG)[0]
+    assert seeded.objective <= cold.objective * (1 + 1e-12)
+    tol = cold.objective * (1 + 1e-12)
+    cold_first = int(np.nonzero(cold.history <= tol)[0][0])
+    hit = np.nonzero(seeded.history <= tol)[0]
+    assert hit.size and int(hit[0]) <= cold_first
+
+
+def test_explicit_empty_seeds_bitwise_cold():
+    """seeds=[[]] and seed_fraction=0 are the same cold start."""
+    t = _task()
+    no_frac = dataclasses.replace(CFG, seed_fraction=0.0)
+    a = cs.cosearch_islands([t], [HW], OPTS, "edp", CFG, seeds=[[]])[0]
+    b = cs.cosearch_islands([t], [HW], OPTS, "edp", no_frac)[0]
+    _same_result(a, b)
+
+
+def test_miqp_anchor_is_valid_partition():
+    t = _task()
+    p = cs.miqp_anchor(t, HW, OPTS, "edp", CFG)
+    assert np.all(p.Px.sum(axis=1) == [op.M for op in t.ops])
+    assert np.all(p.Py.sum(axis=1) == [op.N for op in t.ops])
+
+
+# ------------------------------------------- engine seeding hooks
+GA_CFG = GAConfig(generations=4, population=16, patience=4, seed=3)
+MIQP_CFG = MIQPConfig(engine="lattice", candidate_budget=256,
+                      eval_budget=1024, beam_width=4, refine_sweeps=1,
+                      pair_refine=4, descent_sweeps=2, score_chunk=256)
+
+
+def test_ga_seeds_hook_none_is_bitwise_cold():
+    t = _task()
+    a = ga_jax.solve_islands([t], [HW], OPTS, "edp", GA_CFG)[0]
+    b = ga_jax.solve_islands([t], [HW], OPTS, "edp", GA_CFG,
+                             seeds=None)[0]
+    c = ga_jax.solve_islands([t], [HW], OPTS, "edp", GA_CFG,
+                             seeds=[[]])[0]
+    for other in (b, c):
+        assert a.objective == other.objective
+        np.testing.assert_array_equal(a.partition.Px,
+                                      other.partition.Px)
+        np.testing.assert_array_equal(a.history, other.history)
+
+
+def test_ga_seeds_hook_accepts_proposals():
+    t = _task()
+    props = [p for p, _ in cs.gradient_seeds(t, HW, OPTS, "edp", CFG)]
+    r = ga_jax.solve_islands([t], [HW], OPTS, "edp", GA_CFG,
+                             seeds=[props])[0]
+    assert np.all(r.partition.Px.sum(axis=1) ==
+                  [op.M for op in t.ops])
+    with pytest.raises(ValueError):
+        ga_jax.solve_islands([t], [HW], OPTS, "edp", GA_CFG,
+                             seeds=[props, props])
+
+
+def test_miqp_anchor_hook_none_is_bitwise_cold():
+    t = _task()
+    a = miqp_jax.solve_lattice_batch([t], [HW], OPTS, "edp",
+                                     MIQP_CFG)[0]
+    b = miqp_jax.solve_lattice_batch([t], [HW], OPTS, "edp", MIQP_CFG,
+                                     anchors=None)[0]
+    c = miqp_jax.solve_lattice_batch([t], [HW], OPTS, "edp", MIQP_CFG,
+                                     anchors=[None])[0]
+    for other in (b, c):
+        assert a.objective == other.objective
+        np.testing.assert_array_equal(a.partition.Px,
+                                      other.partition.Px)
+
+
+def test_miqp_anchor_hook_recenters():
+    t = _task()
+    anchor = cs.miqp_anchor(t, HW, OPTS, "edp", CFG)
+    r = miqp_jax.solve_lattice_batch([t], [HW], OPTS, "edp", MIQP_CFG,
+                                     anchors=[anchor])[0]
+    assert np.isfinite(r.objective)
+    assert np.all(r.partition.Px.sum(axis=1) ==
+                  [op.M for op in t.ops])
+    with pytest.raises(ValueError):
+        miqp_jax.solve_lattice_batch([t], [HW], OPTS, "edp", MIQP_CFG,
+                                     anchors=[anchor, anchor])

@@ -1,0 +1,134 @@
+"""Property tests for the co-search Pareto utilities (DESIGN.md §16):
+dominance is a strict partial order, ``pareto_mask`` fronts are
+minimal and complete, and the archive's front is a pure function of
+the *set* of inserted points (insertion-order invariance).
+
+Runs property-based via ``hypothesis`` when installed
+(tests/_hypothesis_compat.py); otherwise the same properties run
+against deterministic seeded sample batteries so the suite's pass
+count does not depend on a dev-only dependency. Samples draw from a
+small integer lattice on purpose — exact ties and duplicate rows are
+where dominance/front bugs live.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.cosearch import ParetoArchive, dominates, pareto_mask
+
+SEEDS = range(25)
+
+
+def _points(seed, max_n=12, dim=3):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, max_n + 1))
+    return rng.integers(0, 4, size=(n, dim)).astype(np.float64)
+
+
+# ---------------------------------------------------------- properties
+def check_dominance_partial_order(pts):
+    """Irreflexive, antisymmetric, transitive — on every pair/triple of
+    the sample (incl. constructed dominated chains so the transitivity
+    premise actually fires)."""
+    for a in pts:
+        assert not dominates(a, a)
+    for a in pts:
+        for b in pts:
+            assert not (dominates(a, b) and dominates(b, a))
+    # constructed chain a < b < c (elementwise bumps) → a < c
+    for a in pts:
+        b = a + np.array([1.0] + [0.0] * (len(a) - 1))
+        c = b + 1.0
+        assert dominates(a, b) and dominates(b, c)
+        assert dominates(a, c)
+
+
+def check_front_minimal_and_complete(pts):
+    """No front member dominates or equals another; every excluded
+    point is dominated by (or duplicates) some member."""
+    mask = pareto_mask(pts)
+    assert mask.any()
+    front = pts[mask]
+    for i, a in enumerate(front):
+        for j, b in enumerate(front):
+            if i != j:
+                assert not dominates(a, b)
+                assert not np.array_equal(a, b)
+    for p in pts[~mask]:
+        assert any(dominates(q, p) or np.array_equal(q, p)
+                   for q in front)
+
+
+def check_archive_order_invariance(pts, perm_seed):
+    """The archive front is identical for any insertion order, and
+    matches ``pareto_mask`` applied to the whole batch at once."""
+    a1, a2 = ParetoArchive(), ParetoArchive()
+    for p in pts:
+        a1.insert(p)
+    order = np.random.default_rng(perm_seed).permutation(len(pts))
+    for i in order:
+        a2.insert(pts[i])
+    f1, f2 = a1.front(), a2.front()
+    assert np.array_equal(f1, f2)
+    ref = pts[pareto_mask(pts)]
+    ref = ref[np.lexsort(tuple(ref[:, j]
+                               for j in range(ref.shape[1] - 1, -1, -1)))]
+    assert np.array_equal(f1, ref)
+    # truncation is a prefix rule: front(k) == front()[:k]
+    k = max(1, len(f1) - 1)
+    assert np.array_equal(a1.front(k), f1[:k])
+
+
+# ------------------------------------------------------------- drivers
+if HAVE_HYPOTHESIS:
+    lattice_points = st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 3),
+                  st.integers(0, 3)),
+        min_size=1, max_size=12,
+    ).map(lambda rows: np.asarray(rows, dtype=np.float64))
+
+    @settings(max_examples=100, deadline=None)
+    @given(pts=lattice_points)
+    def test_dominance_partial_order(pts):
+        check_dominance_partial_order(pts)
+
+    @settings(max_examples=100, deadline=None)
+    @given(pts=lattice_points)
+    def test_front_minimal_and_complete(pts):
+        check_front_minimal_and_complete(pts)
+
+    @settings(max_examples=100, deadline=None)
+    @given(pts=lattice_points, perm_seed=st.integers(0, 2**32 - 1))
+    def test_archive_order_invariance(pts, perm_seed):
+        check_archive_order_invariance(pts, perm_seed)
+
+else:
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_dominance_partial_order(seed):
+        check_dominance_partial_order(_points(seed))
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_front_minimal_and_complete(seed):
+        check_front_minimal_and_complete(_points(seed))
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_archive_order_invariance(seed):
+        check_archive_order_invariance(_points(seed), seed + 1)
+
+
+# ----------------------------------------------------- concrete pins
+def test_insert_reports_membership():
+    a = ParetoArchive()
+    assert a.insert([1.0, 2.0], payload="p0")
+    assert not a.insert([1.0, 2.0])          # exact duplicate
+    assert not a.insert([2.0, 3.0])          # dominated
+    assert a.insert([0.5, 3.0], payload="p1")  # trades off → joins
+    assert a.insert([0.0, 0.0], payload="p2")  # dominates all → prunes
+    assert len(a) == 1
+    assert a.payloads() == ["p2"]
+
+
+def test_empty_archive_front_shape():
+    assert ParetoArchive().front().shape == (0, 0)
+    assert ParetoArchive().payloads() == []

@@ -1,0 +1,109 @@
+"""Serving the fused co-search (DESIGN.md §14 × §16): solo == served
+bitwise through the coalescing ``OptServer``, CallKey grouping for
+``method="cosearch"``, and the BadRequest firewall for malformed
+multi-objective requests."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import CoSearchConfig, EvalOptions, Task, make_hw, sweep
+from repro.core.ga import GAConfig
+from repro.graphs import WORKLOADS
+from repro.serve import BadRequest, OptRequest, OptServer
+from repro.serve.coalesce import group_requests
+
+HW = make_hw("A", 2, "hbm")
+OPTS = EvalOptions(redistribution=True, async_exec=True)
+CFG = CoSearchConfig(population=16, generations=10, patience=10,
+                     batch=3, seed=0, seed_steps=4, seed_starts=2,
+                     archive_size=8)
+
+
+def _task(name="alex4", lo=0, hi=4):
+    full = WORKLOADS["alexnet"](batch=1)
+    ops = list(full.ops[lo:hi])
+    ops[0] = dataclasses.replace(ops[0], chained=False)
+    return Task(name, ops)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    sweep.clear_cache()
+    yield
+    sweep.clear_cache()
+
+
+def test_solo_equals_served_bitwise():
+    tasks = [_task("alex4a", 0, 4), _task("alex4b", 1, 5)]
+    pts = [sweep.EvalPoint(t, HW, OPTS) for t in tasks]
+    solo = [sweep.cosearch_sweep([p], "edp", CFG, cache=False)[0]
+            for p in pts]
+    sweep.clear_cache()
+    reqs = [OptRequest(kind="solve", point=p, method="cosearch",
+                       objective="edp", cfg=CFG, backend="jax")
+            for p in pts]
+    # both requests share one CallKey → ONE coalesced sweep call
+    assert len(group_requests(reqs)) == 1
+    srv = OptServer(autostart=False)
+    futs = [srv.submit(r) for r in reqs]
+    srv.start()
+    recs = [f.result(timeout=300) for f in futs]
+    srv.kill()
+    for s, r in zip(solo, recs):
+        assert s.objective == r.objective
+        assert s.diagonal == r.diagonal
+        np.testing.assert_array_equal(s.partition.Px, r.partition.Px)
+        np.testing.assert_array_equal(s.partition.Py, r.partition.Py)
+        np.testing.assert_array_equal(s.seg_mask, r.seg_mask)
+        for k in s.front:
+            np.testing.assert_array_equal(s.front[k], r.front[k])
+
+
+def test_callkey_separates_objectives_and_cfgs():
+    p = sweep.EvalPoint(_task(), HW, OPTS)
+    r1 = OptRequest(kind="solve", point=p, method="cosearch",
+                    objective="edp", cfg=CFG)
+    r2 = OptRequest(kind="solve", point=p, method="cosearch",
+                    objective="latency", cfg=CFG)
+    r3 = OptRequest(kind="solve", point=p, method="cosearch",
+                    objective="edp",
+                    cfg=dataclasses.replace(CFG, population=32))
+    assert len(group_requests([r1, r2, r3])) == 3
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(backend="numpy"), "backend"),
+    (dict(cfg=GAConfig()), "CoSearchConfig"),
+    (dict(objective="throughput"), "objective"),
+    (dict(method="anneal"), "method"),
+])
+def test_bad_requests_rejected(kw, msg):
+    base = dict(kind="solve", point=sweep.EvalPoint(_task(), HW, OPTS),
+                method="cosearch", objective="edp", cfg=CFG,
+                backend="jax")
+    base.update(kw)
+    with pytest.raises(BadRequest, match=msg):
+        OptRequest(**base).validate()
+
+
+def test_bad_request_isolated_from_cohort():
+    """A malformed co-search request is rejected per-request; the valid
+    request in the same submission batch still serves."""
+    good = OptRequest(kind="solve",
+                      point=sweep.EvalPoint(_task(), HW, OPTS),
+                      method="cosearch", objective="edp", cfg=CFG)
+    bad = OptRequest(kind="solve",
+                     point=sweep.EvalPoint(_task(), HW, OPTS),
+                     method="cosearch", objective="edp", cfg=CFG,
+                     backend="numpy")
+    srv = OptServer(autostart=False)
+    fg, fb = srv.submit(good), srv.submit(bad)
+    srv.start()
+    r = fg.result(timeout=300)
+    assert np.isfinite(r.objective)
+    with pytest.raises(BadRequest):
+        fb.result(timeout=300)
+    st = srv.stats()
+    srv.kill()
+    assert st["completed"] == 1 and st["rejected"] == 1
