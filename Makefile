@@ -4,7 +4,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test smoke bench-fast bench-smoke bench-compare ga-fitness \
 	ga-evolve netsim miqp-solve pipeline-schedule opt-serve \
-	sweep-shard cosearch quickstart
+	sweep-shard cosearch planner-validate bench-smoke-validate cov \
+	quickstart
 
 # Tier-1 verify — the command CI and the roadmap pin.
 test:
@@ -30,9 +31,11 @@ bench-fast:
 # check that the GA engines + solve_grid, the netsim backends, the
 # MIQP engines (milp/lattice parity), the pipelining engines
 # (python/vectorized exact-parity gate), the optimization server
-# (solo==served bitwise parity gate), and the sharded sweep fabric
-# (single==sharded bitwise parity gate on 8 forced virtual devices)
-# still run and write artifacts.
+# (solo==served bitwise parity gate), the sharded sweep fabric
+# (single==sharded bitwise parity gate on 8 forced virtual devices),
+# and the planner measured-vs-predicted validation gate (calibrated
+# evaluator vs dryrun cost analysis; exits nonzero above the pinned
+# tolerance even in smoke mode) still run and write artifacts.
 bench-smoke:
 	$(PY) -m benchmarks.perf_iterations --cell ga_evolve --smoke
 	$(PY) -m benchmarks.perf_iterations --cell netsim --smoke
@@ -41,6 +44,7 @@ bench-smoke:
 	$(PY) -m benchmarks.perf_iterations --cell opt_serve --smoke
 	$(PY) -m benchmarks.perf_iterations --cell sweep_shard --smoke
 	$(PY) -m benchmarks.perf_iterations --cell cosearch --smoke
+	$(PY) -m benchmarks.perf_iterations --cell planner_validate --smoke
 
 # Verdict-regression gate: diff benchmarks/artifacts/*.json against the
 # committed baselines (benchmarks/baselines/verdicts.json); exits
@@ -87,6 +91,27 @@ sweep-shard:
 # dominance / bitwise-parity / gradient-seeding gates (DESIGN.md §16).
 cosearch:
 	$(PY) -m benchmarks.perf_iterations --cell cosearch
+
+# Measured-vs-predicted validation gate: kernel-calibrated analytical
+# evaluator vs executed-plan dryrun cost analysis over the model zoo
+# (DESIGN.md §17). Exits nonzero above the pinned tolerances.
+planner-validate:
+	$(PY) -m benchmarks.perf_iterations --cell planner_validate
+
+# Just the validation gate, smoke profile — the per-leg CI entry.
+bench-smoke-validate:
+	$(PY) -m benchmarks.perf_iterations --cell planner_validate --smoke
+
+# Coverage smoke: tier-1 suite under pytest-cov with a floor on the
+# planner-loop modules (sharding/ + kernels/calibrate.py), report-only
+# elsewhere (scripts/coverage_gate.py). Skips gracefully when pytest-cov
+# is not installed (it is optional in requirements-dev.txt).
+cov:
+	@$(PY) -c "import pytest_cov" 2>/dev/null \
+	    || { echo "cov: pytest-cov not installed; skipping"; exit 0; } \
+	    && $(PY) -m pytest -x -q --cov=repro \
+	        --cov-report=json:coverage.json --cov-report=term \
+	    && $(PY) scripts/coverage_gate.py
 
 quickstart:
 	$(PY) examples/quickstart.py

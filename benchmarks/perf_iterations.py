@@ -91,11 +91,12 @@ from jax.sharding import PartitionSpec as P
 from repro.roofline.analysis import (HBM_BW, LINK_BW, PEAK_FLOPS,
                                      analytic_hbm_bytes, model_flops_for)
 
-# NOTE: the roofline hillclimb cells need 512 virtual host devices;
-# importing repro.launch.dryrun sets XLA_FLAGS accordingly, so that
-# import happens lazily on the mesh-cell path only. The ga_* cells must
-# run WITHOUT it — carving one CPU into 512 XLA devices starves the
-# intra-op thread pool and distorts evaluator/GA timings several-fold.
+# NOTE: the roofline hillclimb cells need 512 virtual host devices; the
+# mesh-cell path below calls dryrun.ensure_virtual_devices() explicitly
+# before building the production mesh (importing the module itself is
+# side-effect-free). The ga_* cells must run WITHOUT it — carving one CPU
+# into 512 XLA devices starves the intra-op thread pool and distorts
+# evaluator/GA timings several-fold.
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 LOG = os.path.join(ART, "perf_log.json")
@@ -172,7 +173,10 @@ def main():
                          "bitwise parity gate, DESIGN.md §15) | cosearch "
                          "(fused cross-layer co-search vs the sequential "
                          "GA→link→pipeline pass flow + dominance/parity/"
-                         "seeding gates, DESIGN.md §16)")
+                         "seeding gates, DESIGN.md §16) | planner_validate "
+                         "(measured-vs-predicted gate: calibrated "
+                         "analytical evaluator vs dryrun cost analysis "
+                         "over the model zoo, DESIGN.md §17)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny populations/generations — the no-regression "
                          "smoke profile used by `make bench-smoke`")
@@ -205,8 +209,14 @@ def main():
     if args.cell == "cosearch":
         run_cosearch(smoke=args.smoke)
         return
-    from repro.launch import dryrun  # noqa: F401 -- sets the 512-device
-    from repro.launch.mesh import make_production_mesh  # XLA_FLAGS first
+    if args.cell == "planner_validate":
+        run_planner_validate(smoke=args.smoke)
+        return
+    # The hillclimb cells run on the 512-device production meshes; set
+    # the topology explicitly (must precede first backend use).
+    from repro.launch.dryrun import ensure_virtual_devices
+    ensure_virtual_devices()
+    from repro.launch.mesh import make_production_mesh
 
     mesh = make_production_mesh()
     dp = ("data",)
@@ -1185,6 +1195,181 @@ def run_cosearch(smoke: bool = False):
         # sequential solutions are representable genomes) — fail loudly.
         raise SystemExit("cosearch: joint search worse than the "
                          "sequential per-pass flow on >=1 point")
+
+
+# Pinned tolerances for the planner_validate gate (DESIGN.md §17).
+# After the global scale fit, every cell's measured/predicted ratio must
+# stay within VALIDATE_MAX_DEV of the fitted scale, and log-predicted vs
+# log-measured must correlate at VALIDATE_MIN_CORR across the zoo.
+# Pinned from the 2026-08 full run (max dev 1.53x, corr 0.982) with ~2x
+# headroom on the deviation and a floor well under the observed corr.
+VALIDATE_MAX_DEV = 3.0
+VALIDATE_MIN_CORR = 0.85
+
+
+def run_planner_validate(smoke: bool = False):
+    """Measured-vs-predicted validation gate for the analytical evaluator
+    (DESIGN.md §17).
+
+    Calibrates the evaluator's constants from kernel microbenchmarks
+    (``kernels/calibrate.profile_kernels``), persists + reloads the
+    profile through the cache-store idiom, then sweeps the model zoo
+    through BOTH cost models on the same validation slice (2 layers,
+    seq 512, batch 8, prefill):
+
+      predicted  — ``sharding/mcm_planner.plan`` on the calibrated
+                   TPU-as-MCM model (eq. 7–12), and
+      measured   — the plan *executed* through ``launch/dryrun``
+                   (``execute_plan``: lowered, compiled, costed with
+                   trip-exact calibration counts), rooflined with the
+                   SAME profile constants.
+
+    A single multiplicative scale is fitted in log space (the two models
+    count different overheads; structure, not scale, is the claim); the
+    gate pins the max per-cell deviation from that scale and the log-log
+    correlation, and exits nonzero on violation — in smoke mode too.
+    ``--smoke`` runs 3 archs with the tiny profile; the full run covers
+    7 archs and writes the verdict.
+    """
+    import math
+
+    import numpy as np
+
+    from repro.configs import SHAPE_DEFS, get_config
+    from repro.kernels.calibrate import (load_profile, profile_kernels,
+                                         save_profile)
+    from repro.launch.dryrun import execute_plan
+    from repro.launch.mesh import make_debug_mesh
+    from repro.sharding.mcm_planner import arch_to_task, plan
+
+    archs = ["smollm-360m", "gemma2-2b", "rwkv6-3b"]
+    if not smoke:
+        archs += ["minicpm3-4b", "internlm2-20b", "zamba2-2.7b",
+                  "mixtral-8x22b"]
+    layers, seq, batch = 2, 512, 8
+
+    # 1) Calibrate and round-trip the profile through the store — the
+    #    persistence path is part of the production loop, not just a test.
+    os.makedirs(ART, exist_ok=True)
+    t0 = time.time()
+    prof = profile_kernels(smoke=smoke, reps=2 if smoke else 3)
+    save_profile(prof, os.path.join(ART, "calibrated_hw.bin"))
+    prof = load_profile(os.path.join(ART, "calibrated_hw.bin"))
+    if prof is None:
+        raise SystemExit("planner_validate: profile store roundtrip "
+                         "failed")
+    t_cal = time.time() - t0
+    print(f"[perf] planner_validate: calibrated {prof.backend} in "
+          f"{t_cal:.1f}s — matmul {prof.flops_per_s:.3g} FLOP/s, "
+          f"stream {prof.bytes_per_s:.3g} B/s, byte overhead "
+          f"{prof.byte_overhead:.2f}x")
+
+    # 2) Sweep the zoo through both cost models on one validation slice.
+    mesh = make_debug_mesh()
+    mesh_axes = dict(mesh.shape)
+    mesh_shape = (mesh_axes.get("data", 1), mesh_axes.get("model", 1))
+    vshape = "__planner_validate"
+    SHAPE_DEFS[vshape] = dict(seq_len=seq, global_batch=batch,
+                              kind="prefill")
+    rows = []
+    try:
+        for arch in archs:
+            cfg = get_config(arch)
+            # Depth of the validation slice: at least `layers`, rounded up
+            # to the arch's repeating unit (hybrid/local-global periods) so
+            # the model's block grouping stays constructible.
+            per = (getattr(cfg, "hybrid_attn_period", 0)
+                   or getattr(cfg, "local_global_period", 0) or 1)
+            L = per * max(1, -(-layers // per))
+            pr = plan(cfg, mesh_shape, seq, batch, layers=L,
+                      ga_budget=3 if smoke else 10, profile=prof)
+            t0 = time.time()
+            rec = execute_plan(
+                pr, arch, vshape, mesh, mesh_name="debug",
+                calibrate=True, cfg_overrides={"n_layers": L},
+                serve_fsdp=("data",))
+            cal = rec["calibrated"]
+            coll = sum(cal["collective_bytes_per_device"].values())
+            measured = max(
+                cal["flops_per_device"] / prof.flops_per_s,
+                cal["bytes_per_device"] / prof.bytes_per_s,
+                coll / prof.bw_nop_model if coll else 0.0)
+            task = arch_to_task(cfg, seq, batch, layers=L)
+            hlo_flops = cal["flops_per_device"] * mesh.size
+            rows.append({
+                "arch": arch,
+                "layers": L,
+                "predicted_s": pr.optimized_latency,
+                "measured_s": measured,
+                "task_flops": task.total_flops,
+                "hlo_flops": hlo_flops,
+                "flops_ratio": hlo_flops / task.total_flops,
+                "plan_knobs": rec["plan"]["knobs"],
+                "nonuniform_headroom": pr.nonuniform_headroom,
+                "compile_s": rec["compile_s"],
+            })
+            print(f"[perf] planner_validate {arch}: pred="
+                  f"{pr.optimized_latency*1e3:.2f}ms meas="
+                  f"{measured*1e3:.2f}ms flops-ratio="
+                  f"{rows[-1]['flops_ratio']:.2f} "
+                  f"({time.time() - t0:.0f}s)")
+    finally:
+        SHAPE_DEFS.pop(vshape, None)
+
+    # 3) Fit the scale, gate deviation + correlation.
+    logs = [math.log(r["measured_s"] / r["predicted_s"]) for r in rows]
+    scale = math.exp(sum(logs) / len(logs))
+    max_dev = math.exp(max(abs(v - math.log(scale)) for v in logs))
+    lp = np.log([r["predicted_s"] for r in rows])
+    lm = np.log([r["measured_s"] for r in rows])
+    corr = (float(np.corrcoef(lp, lm)[0, 1])
+            if len(rows) >= 3 and lp.std() > 0 else 1.0)
+
+    out = {
+        "cell": "planner_validate",
+        "smoke": smoke,
+        "backend": prof.backend,
+        "n_devices": mesh.size,
+        "mesh_shape": list(mesh_shape),
+        "slice": {"min_layers": layers, "seq_len": seq, "batch": batch},
+        "profile": {
+            "flops_per_s": prof.flops_per_s,
+            "bytes_per_s": prof.bytes_per_s,
+            "byte_overhead": prof.byte_overhead,
+            "nop_frac": prof.nop_frac,
+            "schema": prof.schema,
+            "calibrate_s": round(t_cal, 2),
+        },
+        "rows": rows,
+        "fitted_scale": scale,
+        "max_scale_deviation": max_dev,
+        "log_log_corr": corr,
+        "tolerances": {"max_deviation": VALIDATE_MAX_DEV,
+                       "min_corr": VALIDATE_MIN_CORR},
+    }
+    ok = max_dev <= VALIDATE_MAX_DEV and corr >= VALIDATE_MIN_CORR
+    if not smoke:
+        out["verdict"] = (
+            f"confirmed (max dev {max_dev:.2f}x <= {VALIDATE_MAX_DEV}x, "
+            f"corr {corr:.3f} >= {VALIDATE_MIN_CORR})" if ok else
+            f"refuted (max dev {max_dev:.2f}x vs {VALIDATE_MAX_DEV}x, "
+            f"corr {corr:.3f} vs {VALIDATE_MIN_CORR})")
+        print(f"[perf] planner_validate -> {out['verdict']}")
+    else:
+        print(f"[perf] planner_validate (smoke): scale={scale:.2f} "
+              f"max-dev={max_dev:.2f}x corr={corr:.3f} ok={ok}")
+
+    name = ("planner_validate_smoke.json" if smoke
+            else "planner_validate.json")
+    with open(os.path.join(ART, name), "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote", os.path.join(ART, name))
+    if not ok:
+        # The gate IS the cell: prediction drifted off measurement.
+        raise SystemExit(
+            f"planner_validate: measured-vs-predicted gate failed "
+            f"(max dev {max_dev:.2f}x, tol {VALIDATE_MAX_DEV}x; corr "
+            f"{corr:.3f}, min {VALIDATE_MIN_CORR})")
 
 
 def run_smollm(mesh):

@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-
 """Multi-pod dry-run: ``lower().compile()`` every (architecture × input
 shape) cell on the production meshes, proving the distribution config is
 coherent — shardings lower, collectives are legal, and the per-device
@@ -16,9 +11,15 @@ Run:
 Artifacts (memory analysis, cost analysis, per-collective byte counts) are
 written to ``benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json`` and
 consumed by the roofline benchmark (EXPERIMENTS.md §Dry-run/§Roofline).
+
+Importing this module has no side effects. The CLI entrypoint calls
+:func:`ensure_virtual_devices` itself (the production meshes need 512
+host devices); library users pick their own topology — e.g. via
+``benchmarks/common.py:force_host_devices`` — before first backend use.
 """
 import argparse
 import json
+import os
 import re
 import time
 import traceback
@@ -39,6 +40,18 @@ ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "benchmarks", "artifacts", "dryrun")
 
 from .policies import TRAIN_ACCUM, TRAIN_LOWMEM, TRAIN_V_BF16  # noqa: E402
+
+_DEVICES_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_virtual_devices(n: int = 512) -> None:
+    """Carve the host into ``n`` virtual XLA devices unless the caller
+    already pinned a count. Must run before jax initializes its backend —
+    the CLI below calls it first thing; importing this module never does."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _DEVICES_FLAG not in flags:
+        os.environ["XLA_FLAGS"] = f"{_DEVICES_FLAG}={n} {flags}".strip()
+
 
 _COLL_RE = re.compile(
     r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
@@ -113,11 +126,13 @@ def _step_fn(cfg, kind, accum: int = 1, arch: str = ""):
 
 def lower_cell(arch: str, shape: str, mesh, *, shard_residual=None,
                extra_rules=None, accum=None, cfg_overrides=None,
-               serve_fsdp=None):
+               serve_fsdp=None, cfg=None):
     """Returns (lowered, meta) for one cell on one mesh. The keyword knobs
     (sharding rules, accumulation, config fields) are the §Perf iteration
-    surface."""
-    cfg = get_config(arch)
+    surface; ``cfg=`` substitutes an explicit config (e.g. the reduced
+    variants) for the registry lookup."""
+    if cfg is None:
+        cfg = get_config(arch)
     if cfg_overrides:
         cfg = cfg.replace(**cfg_overrides)
     sd = SHAPE_DEFS[shape]
@@ -229,6 +244,33 @@ def run_cell(arch: str, shape: str, mesh_name: str, mesh,
     return rec
 
 
+def execute_plan(plan_result, arch: str, shape: str, mesh,
+                 mesh_name: str = "plan", *, calibrate: bool = False,
+                 cfg=None, cfg_overrides=None, extra_rules=None,
+                 **extra_knobs) -> dict:
+    """Lower, compile, and cost the layout a ``sharding/mcm_planner`` plan
+    chose: the planner's knobs (residual-stream sharding, microbatch
+    accumulation, redistribution mask) become executable dryrun knobs
+    instead of a report. Returns a ``run_cell`` record with a ``plan``
+    section recording the analytical prediction next to the measured cost
+    analysis — the unit the validation gate compares."""
+    knobs = plan_result.to_dryrun_knobs()
+    knobs.update(extra_knobs)
+    rec = run_cell(arch, shape, mesh_name, mesh, calibrate=calibrate,
+                   cfg=cfg, cfg_overrides=cfg_overrides,
+                   extra_rules=extra_rules, **knobs)
+    rec["plan"] = {
+        "arch": plan_result.arch,
+        "baseline_latency_s": float(plan_result.baseline_latency),
+        "optimized_latency_s": float(plan_result.optimized_latency),
+        "modeled_speedup": float(plan_result.modeled_speedup),
+        "nonuniform_headroom": float(plan_result.nonuniform_headroom),
+        "redist_mask": [int(b) for b in plan_result.redist_mask],
+        "knobs": {k: v for k, v in knobs.items()},
+    }
+    return rec
+
+
 def _calib_layers(cfg) -> tuple[int, int, float, float, float]:
     """(L1, L2, units1, units2, units_full) for per-unit extrapolation."""
     if cfg.family == "hybrid":
@@ -245,7 +287,7 @@ def _calib_layers(cfg) -> tuple[int, int, float, float, float]:
 
 def calibrate_cell(arch: str, shape: str, mesh, *, extra_rules=None,
                    accum=None, shard_residual=None,
-                   cfg_overrides=None, serve_fsdp=None) -> dict:
+                   cfg_overrides=None, serve_fsdp=None, cfg=None) -> dict:
     """Exact per-cell roofline quantities: lower two small *unrolled*
     configs (single-trip inner scans via calibration mode, attention/loss
     chunks = S, accumulation loop unrolled) and extrapolate per repeating
@@ -253,7 +295,7 @@ def calibrate_cell(arch: str, shape: str, mesh, *, extra_rules=None,
     counting). Accepts the same §Perf knobs as lower_cell."""
     from ..kernels.calibrate import calibration
 
-    base = get_config(arch)
+    base = cfg if cfg is not None else get_config(arch)
     if cfg_overrides:
         base = base.replace(**cfg_overrides)
     L1, L2, u1, u2, uf = _calib_layers(base)
@@ -402,6 +444,7 @@ def save_rec(rec: dict):
 
 
 def main():
+    ensure_virtual_devices()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -37,16 +37,22 @@ V5E_ICI_BW = 50e9                # bytes/s per link
 V5E_MXU = 128
 
 
-def tpu_hw(mesh_shape: tuple[int, int]) -> HWConfig:
+def tpu_hw(mesh_shape: tuple[int, int], *, profile=None) -> HWConfig:
     """Model one pod as a type-C MCM (every chip has local HBM) with the
     ICI as the NoP. freq chosen so the eq.-7 systolic model reproduces the
-    chip's peak matmul throughput: R·C·2·freq = peak FLOP/s."""
+    chip's peak matmul throughput: R·C·2·freq = peak FLOP/s.
+
+    With ``profile`` (a :class:`~repro.kernels.calibrate.CalibratedHW`)
+    the datasheet constants are replaced by the measured ones: each model
+    chip delivers the microbenchmarked matmul throughput and memory rate,
+    so planner predictions share a basis with dryrun cost analysis."""
     X, Y = mesh_shape
-    freq = V5E_PEAK_FLOPS / (2 * V5E_MXU * V5E_MXU)
-    return HWConfig(
+    hw = HWConfig(
         bw_nop=V5E_ICI_BW, bw_mem=V5E_HBM_BW * X * Y, X=X, Y=Y,
-        R=V5E_MXU, C=V5E_MXU, mcm_type=MCMType.C, freq_hz=freq,
+        R=V5E_MXU, C=V5E_MXU, mcm_type=MCMType.C,
+        freq_hz=V5E_PEAK_FLOPS / (2 * V5E_MXU * V5E_MXU),
         bytes_per_elem=2)
+    return profile.apply(hw) if profile is not None else hw
 
 
 def arch_to_task(cfg, seq_len: int, batch: int, *, layers: int | None = None
@@ -111,6 +117,11 @@ def arch_to_task(cfg, seq_len: int, batch: int, *, layers: int | None = None
 
     for i in range(L):
         block(i)
+    # The vocabulary projection is real forward work the dryrun cost
+    # analysis counts — model it so measured-vs-predicted comparisons
+    # (DESIGN.md §17) share scope. It dominates shallow validation slices.
+    if getattr(cfg, "vocab_size", 0):
+        ops.append(GemmOp("lm_head", M=m, K=D, N=cfg.vocab_size))
     return Task(f"{cfg.name}_L{L}", ops)
 
 
@@ -127,11 +138,21 @@ class PlanResult:
     def modeled_speedup(self) -> float:
         return self.baseline_latency / self.optimized_latency
 
+    def to_dryrun_knobs(self) -> dict:
+        """The executable subset of the plan, as ``launch/dryrun``
+        ``lower_cell``/``run_cell`` keyword knobs — what
+        :func:`repro.launch.dryrun.execute_plan` lowers and compiles."""
+        return {"shard_residual": bool(self.knobs["shard_residual"]),
+                "accum": int(self.knobs["accum_steps"])}
+
 
 def plan(cfg, mesh_shape: tuple[int, int], seq_len: int, batch: int,
-         *, layers: int = 2, ga_budget: int = 30) -> PlanResult:
-    """Score layouts for one arch on one pod and emit runtime knobs."""
-    hw = tpu_hw(mesh_shape)
+         *, layers: int = 2, ga_budget: int = 30,
+         profile=None) -> PlanResult:
+    """Score layouts for one arch on one pod and emit runtime knobs.
+    ``profile`` swaps the datasheet constants for a measured
+    :class:`~repro.kernels.calibrate.CalibratedHW`."""
+    hw = tpu_hw(mesh_shape, profile=profile)
     task = arch_to_task(cfg, seq_len, max(batch // (mesh_shape[0]
                                                     * mesh_shape[1]), 1)
                         * mesh_shape[0] * mesh_shape[1], layers=layers)
@@ -156,15 +177,21 @@ def plan(cfg, mesh_shape: tuple[int, int], seq_len: int, batch: int,
                 EvalOptions(redistribution=True, async_exec=True),
                 GAConfig(generations=ga_budget, population=32, seed=0,
                          freeze_redist=True))
-    headroom = optimized / ga.objective if ga.objective > 0 else 1.0
+    # The planner only adopts the GA plan when it beats the uniform one,
+    # so the reported headroom is ≥ 1 by construction (a GA run that
+    # loses to uniform is no headroom, not negative headroom).
+    headroom = (optimized / ga.objective
+                if 0 < ga.objective < optimized else 1.0)
 
     knobs = {
         # keeping chained activations resident ↔ shard the residual stream
         # so no per-layer gather/spill of the full hidden state is needed
         "shard_residual": bool(rd_all.any()),
         # the Sec-5.4 cross-sample pipelining analogue: microbatching that
-        # lets XLA overlap grad collectives with the next microbatch
-        "accum_steps": 4 if batch >= 4 else 1,
+        # lets XLA overlap grad collectives with the next microbatch —
+        # largest step count ≤ 4 that divides the global batch, so the
+        # microbatch split is always executable
+        "accum_steps": max(a for a in (4, 2, 1) if batch % a == 0),
         "redist_mask": rd_all,
     }
     return PlanResult(cfg.name, base, optimized, headroom, rd_all, knobs)

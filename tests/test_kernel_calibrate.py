@@ -1,0 +1,153 @@
+"""Tests for ``kernels/calibrate``: the calibration context's contract
+(reentrant, exception-safe), the exact bug the module exists to fix
+(``cost_analysis`` counting a scan body once instead of per trip), and
+the measured :class:`CalibratedHW` profile (fit, apply, persistence)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.calibrate import (CalibratedHW, KernelSample,
+                                     calibration, load_profile,
+                                     profile_kernels, save_profile,
+                                     scan_unroll)
+
+
+def test_calibration_reentrant():
+    assert scan_unroll() == 1
+    with calibration():
+        assert scan_unroll() is True
+        with calibration():
+            assert scan_unroll() is True
+            with calibration(False):       # explicit off nests too
+                assert scan_unroll() == 1
+            assert scan_unroll() is True
+        assert scan_unroll() is True
+    assert scan_unroll() == 1
+
+
+def test_calibration_exception_safe():
+    with pytest.raises(RuntimeError):
+        with calibration():
+            raise RuntimeError("boom")
+    assert scan_unroll() == 1
+    with pytest.raises(RuntimeError):
+        with calibration():
+            with calibration():
+                raise RuntimeError("inner")
+    assert scan_unroll() == 1
+
+
+def _calib_flops(fn, *args):
+    with calibration():
+        compiled = jax.jit(fn).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return float(cost.get("flops", 0.0))
+
+
+def _rolled_flops(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return float(cost.get("flops", 0.0))
+
+
+def _ssm_args(S, chunk):
+    rng = np.random.default_rng(0)
+    B, H, P_, G, N = 1, 1, 8, 1, 8
+    x = jnp.asarray(rng.standard_normal((B, S, H, P_)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (B, S, H)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, G, N)), jnp.float32)
+    D = jnp.asarray(rng.standard_normal((H,)), jnp.float32)
+
+    from repro.kernels.ssm_scan.chunked import ssm_scan_chunked
+
+    def fn(x, dt, a, Bm, Cm, D):
+        return ssm_scan_chunked(x, dt, a, Bm, Cm, D, chunk=chunk)[0]
+
+    return fn, (x, dt, a, Bm, Cm, D)
+
+
+def _rwkv_args(S, chunk):
+    rng = np.random.default_rng(0)
+    B, H, K = 1, 1, 16
+    shp = (B, S, H, K)
+    r = jnp.asarray(rng.standard_normal(shp), jnp.float32)
+    k = jnp.asarray(rng.standard_normal(shp), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(shp), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.6, 0.99, shp), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, K)), jnp.float32)
+
+    from repro.kernels.rwkv6.chunked import wkv6_chunked
+
+    def fn(r, k, v, w, u):
+        return wkv6_chunked(r, k, v, w, u, chunk=chunk)[0]
+
+    return fn, (r, k, v, w, u)
+
+
+@pytest.mark.parametrize("make_args", [_ssm_args, _rwkv_args],
+                         ids=["ssm_scan", "rwkv6"])
+def test_calibrated_flops_scale_linearly_with_trips(make_args):
+    """Under calibration() the chunk scan unrolls, so cost_analysis FLOPs
+    grow linearly with the trip count (constant per-chunk work)."""
+    chunk = 16
+    flops = {}
+    for S in (16, 32, 64):                 # 1, 2, 4 trips
+        fn, args = make_args(S, chunk)
+        flops[S] = _calib_flops(fn, *args)
+    assert flops[32] > flops[16] > 0
+    d1 = flops[32] - flops[16]             # +1 trip
+    d2 = flops[64] - flops[32]             # +2 trips
+    assert d2 == pytest.approx(2 * d1, rel=0.05)
+    # the rolled form under-counts: its 4-trip graph reports the while
+    # body once, i.e. well under half the true work
+    fn, args = make_args(64, chunk)
+    assert _rolled_flops(fn, *args) < 0.6 * flops[64]
+
+
+def test_profile_fit_and_apply():
+    prof = profile_kernels(smoke=True, reps=1)
+    assert prof.backend == jax.default_backend()
+    assert prof.flops_per_s > 0 and prof.bytes_per_s > 0
+    assert prof.byte_overhead >= 1.0
+    kernels = {s.kernel for s in prof.samples}
+    assert kernels == {"gemm", "flash_attention", "rwkv6", "ssm_scan"}
+    for s in prof.samples:
+        assert isinstance(s, KernelSample)
+        assert s.flops > 0 and s.wall_s > 0
+    from repro.core.hw import HWConfig
+    hw = prof.apply(HWConfig(X=2, Y=2, R=64, C=64))
+    assert hw.freq_hz == pytest.approx(prof.flops_per_s / (2 * 64 * 64))
+    assert hw.bw_mem == pytest.approx(prof.bw_mem_model * 4)
+    assert hw.bw_nop == pytest.approx(prof.bw_mem_model * prof.nop_frac)
+
+
+def test_profile_store_roundtrip(tmp_path):
+    prof = CalibratedHW(backend="cpu", flops_per_s=1e11, bytes_per_s=1e10,
+                        byte_overhead=3.0,
+                        samples=(KernelSample("gemm", (8, 8, 8), 1024.0,
+                                              768.0, 768.0, 1e-6),))
+    path = str(tmp_path / "prof.bin")
+    save_profile(prof, path)
+    assert load_profile(path) == prof
+
+
+def test_profile_load_degrades_to_none(tmp_path):
+    missing = str(tmp_path / "nope.bin")
+    assert load_profile(missing) is None
+    corrupt = tmp_path / "corrupt.bin"
+    corrupt.write_bytes(b"not a cache store at all")
+    assert load_profile(str(corrupt)) is None
+    # a stale-schema profile misses too (versioned key)
+    old = CalibratedHW(backend="cpu", flops_per_s=1.0, bytes_per_s=1.0,
+                       byte_overhead=1.0, schema=-1)
+    from repro.serve.cache_store import CacheStore
+    path = str(tmp_path / "stale.bin")
+    CacheStore(path).save({("calibrated_hw", -1): old})
+    assert load_profile(path) is None

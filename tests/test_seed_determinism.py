@@ -1,0 +1,83 @@
+"""Seed-determinism audit: every solver entrypoint returns a
+bitwise-identical result when re-run with the same seed — the property
+the sweep cache (§9 fingerprints), the serve layer, and the planner's
+reported numbers all rest on. One parametrized test, one entrypoint per
+case, exact comparison (no tolerances)."""
+import numpy as np
+import pytest
+
+from repro.core.evaluator import EvalOptions
+from repro.core.hw import make_hw
+from repro.graphs import WORKLOADS
+
+TASK = WORKLOADS["alexnet"](batch=1)
+HW = make_hw("A", 4, "hbm", diagonal_links=True)
+OPTS = EvalOptions(redistribution=True, async_exec=True)
+
+
+def _ga(engine, backend):
+    from repro.core.ga import GAConfig, run_ga
+    r = run_ga(TASK, HW, "latency", OPTS,
+               GAConfig(generations=6, population=16, seed=11),
+               backend=backend, engine=engine)
+    return {"Px": r.partition.Px, "Py": r.partition.Py,
+            "redist": r.redist_mask, "objective": r.objective,
+            "history": r.history}
+
+
+def _miqp():
+    from repro.core.miqp import MIQPConfig, run_miqp
+    r = run_miqp(TASK, HW, "latency", OPTS,
+                 MIQPConfig(engine="lattice", candidate_budget=4096,
+                            eval_budget=8192, descent_sweeps=2))
+    return {"Px": r.partition.Px, "Py": r.partition.Py,
+            "objective": r.objective}
+
+
+def _cosearch():
+    from repro.core.cosearch import CoSearchConfig, run_cosearch
+    r = run_cosearch(TASK, HW, "edp", OPTS,
+                     CoSearchConfig(population=16, generations=6,
+                                    seed=11, seed_steps=4, seed_starts=1))
+    return {"Px": r.partition.Px, "Py": r.partition.Py,
+            "objective": r.objective}
+
+
+def _planner():
+    from repro.configs import get_config
+    from repro.sharding.mcm_planner import plan
+    r = plan(get_config("smollm-360m"), (2, 2), 128, 8, layers=1,
+             ga_budget=3)
+    return {"base": r.baseline_latency, "opt": r.optimized_latency,
+            "headroom": r.nonuniform_headroom, "redist": r.redist_mask,
+            "knobs": {k: v for k, v in r.knobs.items()
+                      if k != "redist_mask"}}
+
+
+CASES = {
+    "ga_python_numpy": lambda: _ga("python", "numpy"),
+    "ga_vectorized_numpy": lambda: _ga("vectorized", "numpy"),
+    "ga_vectorized_jax": lambda: _ga("vectorized", "jax"),
+    "miqp_lattice": _miqp,
+    "cosearch": _cosearch,
+    "planner_search": _planner,
+}
+
+
+def _assert_identical(a, b, path=""):
+    assert type(a) is type(b), f"{path}: {type(a)} != {type(b)}"
+    if isinstance(a, dict):
+        assert a.keys() == b.keys(), path
+        for k in a:
+            _assert_identical(a[k], b[k], f"{path}.{k}")
+    elif isinstance(a, np.ndarray):
+        assert a.dtype == b.dtype and np.array_equal(a, b), path
+    else:
+        assert a == b, f"{path}: {a!r} != {b!r}"
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_repeated_seed_is_bitwise_identical(name):
+    first = CASES[name]()
+    second = CASES[name]()
+    _assert_identical(first, second, name)

@@ -139,6 +139,37 @@ def test_runnable_cells_skips_documented():
     assert len(cells) == 32
 
 
+def test_dryrun_import_leaves_xla_flags_untouched():
+    """Regression: importing launch/dryrun as a library must not mutate
+    XLA_FLAGS (it used to force 512 host devices at import time, fighting
+    benchmarks/common.py:force_host_devices). Topology selection belongs
+    to the CLI entrypoint (ensure_virtual_devices) alone."""
+    import os
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = (
+        "import os\n"
+        "os.environ.pop('XLA_FLAGS', None)\n"
+        "import repro.launch.dryrun as d\n"
+        "assert 'XLA_FLAGS' not in os.environ, os.environ.get('XLA_FLAGS')\n"
+        "d.ensure_virtual_devices(4)\n"
+        "assert os.environ['XLA_FLAGS'] == "
+        "'--xla_force_host_platform_device_count=4'\n"
+        "os.environ['XLA_FLAGS'] = "
+        "'--xla_force_host_platform_device_count=2'\n"
+        "d.ensure_virtual_devices(512)\n"   # explicit setting wins
+        "assert os.environ['XLA_FLAGS'] == "
+        "'--xla_force_host_platform_device_count=2'\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+
+
 def test_mcm_planner():
     from repro.sharding.mcm_planner import arch_to_task, plan, tpu_hw
     cfg = get_config("internlm2-20b")
