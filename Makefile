@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 .PHONY: test smoke bench-fast bench-smoke bench-compare ga-fitness \
 	ga-evolve netsim miqp-solve pipeline-schedule opt-serve \
 	sweep-shard cosearch planner-validate bench-smoke-validate cov \
-	quickstart
+	hetero quickstart
 
 # Tier-1 verify — the command CI and the roadmap pin.
 test:
@@ -35,7 +35,10 @@ bench-fast:
 # (single==sharded bitwise parity gate on 8 forced virtual devices),
 # and the planner measured-vs-predicted validation gate (calibrated
 # evaluator vs dryrun cost analysis; exits nonzero above the pinned
-# tolerance even in smoke mode) still run and write artifacts.
+# tolerance even in smoke mode), and the heterogeneous-hardware
+# migration gate (scalar==broadcast bitwise across every engine family
+# + multi-tenant never losing to even split; exits nonzero even in
+# smoke mode) still run and write artifacts.
 bench-smoke:
 	$(PY) -m benchmarks.perf_iterations --cell ga_evolve --smoke
 	$(PY) -m benchmarks.perf_iterations --cell netsim --smoke
@@ -45,6 +48,7 @@ bench-smoke:
 	$(PY) -m benchmarks.perf_iterations --cell sweep_shard --smoke
 	$(PY) -m benchmarks.perf_iterations --cell cosearch --smoke
 	$(PY) -m benchmarks.perf_iterations --cell planner_validate --smoke
+	$(PY) -m benchmarks.perf_iterations --cell hetero --smoke
 
 # Verdict-regression gate: diff benchmarks/artifacts/*.json against the
 # committed baselines (benchmarks/baselines/verdicts.json); exits
@@ -101,6 +105,12 @@ planner-validate:
 # Just the validation gate, smoke profile — the per-leg CI entry.
 bench-smoke-validate:
 	$(PY) -m benchmarks.perf_iterations --cell planner_validate --smoke
+
+# Heterogeneous-hardware migration gate + multi-tenant placement
+# (DESIGN.md §18): scalar==broadcast bitwise across every engine
+# family, hetero batching speedup, search vs even split.
+hetero:
+	$(PY) -m benchmarks.perf_iterations --cell hetero
 
 # Coverage smoke: tier-1 suite under pytest-cov with a floor on the
 # planner-loop modules (sharding/ + kernels/calibrate.py), report-only

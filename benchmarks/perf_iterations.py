@@ -70,6 +70,17 @@ EDP), a solo==batched bitwise parity gate, and a gradient-seeding gate
 (seeded search reaches the cold-start best in ≤ half the generations,
 counted deterministically — never wall-clock):
     PYTHONPATH=src python -m benchmarks.perf_iterations --cell cosearch
+
+The ``hetero`` cell gates the heterogeneous-hardware migration
+(DESIGN.md §18): a one-class ``ChipletClass`` broadcast must be BITWISE
+identical to the legacy scalar config across every engine family
+(evaluator regime+flow × numpy+jax, GA, MIQP lattice, pipelining,
+co-search — nonzero exit on any bit mismatch), genuinely hetero
+configs must batch through the same compiled eval call as homogeneous
+ones (≥2× batched vs per-point solo, warm), and the multi-tenant band
+search must never lose to the even-split placement (nonzero exit —
+even split is always a candidate):
+    PYTHONPATH=src python -m benchmarks.perf_iterations --cell hetero
 """
 import argparse
 import json
@@ -176,7 +187,11 @@ def main():
                          "seeding gates, DESIGN.md §16) | planner_validate "
                          "(measured-vs-predicted gate: calibrated "
                          "analytical evaluator vs dryrun cost analysis "
-                         "over the model zoo, DESIGN.md §17)")
+                         "over the model zoo, DESIGN.md §17) | hetero "
+                         "(heterogeneous-hardware migration gate: "
+                         "scalar==broadcast bitwise across all engine "
+                         "families + hetero batching + multi-tenant vs "
+                         "even split, DESIGN.md §18)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny populations/generations — the no-regression "
                          "smoke profile used by `make bench-smoke`")
@@ -211,6 +226,9 @@ def main():
         return
     if args.cell == "planner_validate":
         run_planner_validate(smoke=args.smoke)
+        return
+    if args.cell == "hetero":
+        run_hetero(smoke=args.smoke)
         return
     # The hillclimb cells run on the 512-device production meshes; set
     # the topology explicitly (must precede first backend use).
@@ -1195,6 +1213,210 @@ def run_cosearch(smoke: bool = False):
         # sequential solutions are representable genomes) — fail loudly.
         raise SystemExit("cosearch: joint search worse than the "
                          "sequential per-pass flow on >=1 point")
+
+
+def run_hetero(smoke: bool = False):
+    """Heterogeneous-hardware migration gate + multi-tenant placement
+    (DESIGN.md §18).
+
+    Three legs:
+
+    * **Parity (gated, even in smoke)** — a one-class ``ChipletClass``
+      broadcast over the grid must be BITWISE equal to the legacy
+      scalar config in every engine family: evaluator (regime + flow
+      congestion × numpy + jax backends), GA, MIQP lattice, RCPSP
+      pipelining, and co-search. Per-chiplet rate views are filled with
+      the *same* floats the scalar fields hold and consumed
+      elementwise, so any divergence is a real migration bug — exits
+      nonzero.
+    * **Batching** — genuinely hetero configs share the homogeneous
+      shape signature ((n_ops, X, Y, E) + statics), so a (workload ×
+      class-assignment) grid runs in ONE compiled eval call. Timed warm
+      against per-point solo calls; expect ≥2× batched.
+    * **Multi-tenant (gated, even in smoke)** — two models on the
+      asymmetric 2-class grid: the band search must never lose to the
+      even-split placement (it is always in the candidate set — losing
+      means enumeration or scoring broke), and on this grid it should
+      strictly win.
+
+    Acceptance bar: all parity families bitwise + ≥2× batched + strict
+    multi-tenant improvement. ``smoke=True`` shrinks budgets to a
+    seconds-long check and writes ``hetero_smoke.json`` without a
+    verdict (both correctness gates still exit nonzero)."""
+    import numpy as np
+
+    from repro.core import (ChipletClass, EvalOptions, Evaluator,
+                            HWConfig, MultiTenantConfig, make_hw,
+                            solve_multitenant, sweep, uniform_partition)
+    from repro.core.cosearch import CoSearchConfig
+    from repro.core.ga import GAConfig
+    from repro.core.miqp import MIQPConfig, run_miqp
+    from repro.core.pipelining import pipeline_batch
+    from repro.graphs import WORKLOADS
+
+    from .fig_hetero import FAST, SLOW
+
+    if smoke:
+        wnames = ("alexnet",)
+        ga_cfg = GAConfig(population=16, generations=8, patience=4,
+                          seed=0)
+        co_cfg = CoSearchConfig(population=16, generations=8, batch=2,
+                                archive_size=8, seed=0)
+        miqp_cfg = MIQPConfig(engine="lattice", candidate_budget=512,
+                              eval_budget=2048, beam_width=4,
+                              refine_sweeps=1, pair_refine=8,
+                              descent_sweeps=2, max_axis_candidates=16,
+                              max_layer_candidates=32, score_chunk=256,
+                              backend="numpy")
+        n_assign, reps = 4, 1
+        mt_cfg = MultiTenantConfig(method="uniform")
+    else:
+        wnames = ("alexnet", "vit")
+        ga_cfg = GAConfig(population=64, generations=40, seed=0)
+        co_cfg = CoSearchConfig(population=32, generations=16, batch=4,
+                                seed=0)
+        miqp_cfg = MIQPConfig(engine="lattice", backend="jax")
+        n_assign, reps = 8, 3
+        mt_cfg = MultiTenantConfig(
+            method="ga", cfg=GAConfig(population=32, generations=20,
+                                      patience=8, seed=0))
+
+    tasks = {w: WORKLOADS[w](batch=1) for w in wnames}
+    base = make_hw("A", 4, "hbm")
+    hw_scalar = base
+    hw_bcast = base.replace(chiplet_classes=(ChipletClass(),),
+                            class_assignment=(0,) * 16)
+    opts = EvalOptions(redistribution=True, async_exec=True)
+    task0 = tasks[wnames[0]]
+
+    # ---- leg 1: bitwise parity across the five engine families ------
+    def rec_eq(ra, rb):
+        # numeric payload only — records also carry the point's hw/task
+        # metadata, which differs by construction (scalar vs broadcast).
+        return all(
+            np.array_equal(ra[k], rb[k]) if isinstance(ra[k], np.ndarray)
+            else ra[k] == rb[k]
+            for k in ra if isinstance(ra[k], (np.ndarray, float, int)))
+
+    parity = {}
+    ok = True
+    for be in ("numpy", "jax"):
+        for cong in ("regime", "flow"):
+            o = EvalOptions(redistribution=True, async_exec=True,
+                            congestion=cong)
+            ra, rb = sweep.eval_sweep(
+                [sweep.EvalPoint(task0, hw_scalar, o),
+                 sweep.EvalPoint(task0, hw_bcast, o)],
+                backend=be, cache=False)
+            parity[f"eval/{be}/{cong}"] = rec_eq(ra, rb)
+    ga_a, = sweep.solve_grid([sweep.EvalPoint(task0, hw_scalar, opts)],
+                             "edp", ga_cfg, cache=False)
+    ga_b, = sweep.solve_grid([sweep.EvalPoint(task0, hw_bcast, opts)],
+                             "edp", ga_cfg, cache=False)
+    parity["ga"] = (ga_a.objective == ga_b.objective
+                    and np.array_equal(ga_a.partition.Px,
+                                       ga_b.partition.Px)
+                    and np.array_equal(ga_a.partition.Py,
+                                       ga_b.partition.Py))
+    mq_a = run_miqp(task0, hw_scalar, "edp", opts, miqp_cfg)
+    mq_b = run_miqp(task0, hw_bcast, "edp", opts, miqp_cfg)
+    parity["miqp_lattice"] = (
+        mq_a.objective == mq_b.objective
+        and np.array_equal(mq_a.partition.Px, mq_b.partition.Px))
+    segs = [Evaluator(task0, hw).evaluate(
+        uniform_partition(task0, hw.X, hw.Y)).segments()
+        for hw in (hw_scalar, hw_bcast)]
+    pa, pb = (pipeline_batch(s, batch=4) for s in segs)
+    parity["pipelining"] = (segs[0] == segs[1]
+                            and pa.pipelined == pb.pipelined)
+    co_a, = sweep.cosearch_sweep([sweep.EvalPoint(task0, hw_scalar,
+                                                  opts)],
+                                 "edp", co_cfg, cache=False)
+    co_b, = sweep.cosearch_sweep([sweep.EvalPoint(task0, hw_bcast,
+                                                  opts)],
+                                 "edp", co_cfg, cache=False)
+    parity["cosearch"] = (
+        co_a.objective == co_b.objective
+        and np.array_equal(co_a.partition.Px, co_b.partition.Px)
+        and co_a.diagonal == co_b.diagonal)
+    ok = all(parity.values())
+    print("[perf] hetero parity: " + " ".join(
+        f"{k}={'OK' if v else 'FAIL'}" for k, v in parity.items()),
+        flush=True)
+
+    # ---- leg 2: hetero points batch with homogeneous ones -----------
+    rng = np.random.default_rng(0)
+    hetero_pts = [
+        sweep.EvalPoint(
+            tasks[w],
+            HWConfig.hetero([FAST, SLOW],
+                            rng.integers(0, 2, 16).tolist(),
+                            bw_mem=base.bw_mem,
+                            mcm_type=base.mcm_type),
+            opts)
+        for w in wnames for _ in range(n_assign)]
+
+    def batched():
+        return sweep.eval_sweep(hetero_pts, backend="jax", cache=False)
+
+    def solo():
+        return [sweep.eval_sweep([p], backend="jax", cache=False)[0]
+                for p in hetero_pts]
+
+    batched(), solo()                            # warm the executables
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        batched()
+    batched_s = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        solo()
+    solo_s = (time.perf_counter() - t0) / reps
+    speedup = solo_s / batched_s
+
+    # ---- leg 3: multi-tenant vs even split --------------------------
+    hw2 = base.replace(chiplet_classes=(FAST, SLOW),
+                       class_assignment=(0,) * 8 + (1,) * 8)
+    mt_tasks = [task0, tasks[wnames[-1]]]
+    res = solve_multitenant(mt_tasks, hw2, objective="edp", cfg=mt_cfg)
+    mt_ok = res.edp <= res.baseline["edp"] * (1 + 1e-12)
+    mt_strict = res.edp < res.baseline["edp"]
+
+    print(f"[perf] hetero: {len(hetero_pts)} hetero points "
+          f"batched={batched_s:.3f}s solo={solo_s:.3f}s "
+          f"speedup={speedup:.2f}x | parity="
+          f"{'OK' if ok else 'FAIL'} | multitenant "
+          f"edp={res.edp:.3e} even={res.baseline['edp']:.3e} "
+          f"{'beats' if mt_strict else 'ties'} even split", flush=True)
+    out = {"parity": parity, "parity_ok": ok,
+           "hetero_points": len(hetero_pts),
+           "batched_s": batched_s, "solo_s": solo_s, "speedup": speedup,
+           "multitenant": {
+               "inner_method": mt_cfg.method,
+               "search_edp": res.edp,
+               "even_split_edp": res.baseline["edp"],
+               "beats_even_split": bool(mt_strict),
+               "assignment": [list(b) for b in res.assignment]}}
+    if not smoke:
+        good = ok and mt_strict and speedup >= 2.0
+        out["verdict"] = (
+            "confirmed (scalar==broadcast bitwise across all five "
+            "engine families, >=2x batched hetero eval, multi-tenant "
+            "beats even split)" if good else "refuted")
+        print(f"[perf] hetero -> {out['verdict']}")
+    os.makedirs(ART, exist_ok=True)
+    name = "hetero_smoke.json" if smoke else "hetero.json"
+    with open(os.path.join(ART, name), "w") as f:
+        json.dump(out, f, indent=1)
+    if not ok:
+        # A broadcast record that differs from its scalar equivalent is
+        # a migration bug (DESIGN.md §18) — fail the smoke/CI gate.
+        raise SystemExit("hetero: one-class broadcast != scalar config "
+                         "in " + ", ".join(k for k, v in parity.items()
+                                           if not v))
+    if not mt_ok:
+        raise SystemExit("hetero: multi-tenant search lost to the "
+                         "even-split baseline")
 
 
 # Pinned tolerances for the planner_validate gate (DESIGN.md §17).

@@ -27,7 +27,7 @@ def main() -> None:
                          "archived in benchmarks/artifacts/")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (fig3,fig8,fig9_10,"
-                         "fig11,fig12,fig13,roofline)")
+                         "fig11,fig12,fig13,fig_hetero,roofline)")
     ap.add_argument("--backend", default="jax", choices=("numpy", "jax"),
                     help="execution backend for baselines + GA fitness "
                          "+ the fig3 netsim sweep (DESIGN.md §8/§11); "
@@ -40,7 +40,8 @@ def main() -> None:
     from repro.core import sweep
 
     from . import (fig3_motivation, fig8_latency_hbm, fig9_10_scaling,
-                   fig11_pipelining, fig12_lowbw, fig13_ablation, roofline)
+                   fig11_pipelining, fig12_lowbw, fig13_ablation,
+                   fig_hetero, roofline)
 
     benches = {
         "fig3": lambda: fig3_motivation.main(backend=be),
@@ -49,6 +50,7 @@ def main() -> None:
         "fig11": lambda: fig11_pipelining.main(fast=args.fast, backend=be),
         "fig12": lambda: fig12_lowbw.main(fast=args.fast, backend=be),
         "fig13": lambda: fig13_ablation.main(fast=args.fast, backend=be),
+        "fig_hetero": lambda: fig_hetero.main(fast=args.fast, backend=be),
         "roofline": lambda: roofline.main(),
     }
     only = args.only.split(",") if args.only else list(benches)

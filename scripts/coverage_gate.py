@@ -3,7 +3,9 @@
 Reads the ``coverage.json`` that ``make cov`` (pytest --cov) writes and
 enforces a line-coverage floor ONLY on the modules the calibration /
 validation loop rests on — ``src/repro/sharding/`` and
-``src/repro/kernels/calibrate.py`` (DESIGN.md §17). Every other package
+``src/repro/kernels/calibrate.py`` (DESIGN.md §17) — plus the
+multi-tenant placement layer ``src/repro/core/multitenant.py``
+(DESIGN.md §18). Every other package
 is summarized for the log but never fails the build: the tier-1 suite
 is the functional gate there, and a repo-wide floor would punish
 unrelated PRs for dead branches in modules they never touched.
@@ -19,7 +21,8 @@ import os
 import sys
 
 #: repo-relative path fragments the floor applies to
-FLOOR_PATHS = ("repro/sharding/", "repro/kernels/calibrate.py")
+FLOOR_PATHS = ("repro/sharding/", "repro/kernels/calibrate.py",
+               "repro/core/multitenant.py")
 FLOOR_PCT = 80.0
 
 

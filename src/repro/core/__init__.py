@@ -31,6 +31,11 @@ Layers:
     (DESIGN.md §16): one jitted genome spanning partition × diagonal
     links × pipeline segmentation, gradient-guided seeding, batched
     Pareto archive; wired as :func:`repro.core.sweep.cosearch_sweep`.
+  * :mod:`repro.core.multitenant` — multi-tenant placement on one
+    (possibly heterogeneous) package (DESIGN.md §18): contiguous
+    row-band tenant regions, per-tenant inner solves through any
+    engine, NoP contention via the shared flow netsim; wired as
+    :func:`repro.core.sweep.multitenant_sweep`.
   * :mod:`repro.core.api` — one-call front door.
 """
 from .api import (ScheduleResult, baseline_result, optimize,  # noqa: F401
@@ -43,12 +48,16 @@ from .evaluator import (AUTO_POPULATION_THRESHOLD, BACKENDS,  # noqa: F401
                         CONGESTION_MODES, EvalOptions, EvalResult,
                         Evaluator, resolve_auto_backend)
 from .ga import GAConfig, GAResult, run_ga  # noqa: F401
-from .hw import HWConfig, MCMType, Topology, make_hw  # noqa: F401
+from .hw import (ChipletClass, HWConfig, MCMType, Topology,  # noqa: F401
+                 make_hw)
 from .miqp import (MIQPConfig, MIQPResult, run_miqp,  # noqa: F401
                    resolve_auto_engine)
+from .multitenant import (MultiTenantConfig, MultiTenantResult,  # noqa: F401
+                          solve_multitenant)
 from .pipelining import (PIPELINE_ENGINES, PipelineConfig,  # noqa: F401
                          PipelineResult, pipeline_batch,
                          resolve_auto_pipeline_engine)
-from .sweep import (EvalPoint, PipelinePoint, cosearch_sweep,  # noqa: F401
-                    eval_sweep, pipeline_sweep, solve_grid)
+from .sweep import (EvalPoint, MultiTenantPoint, PipelinePoint,  # noqa: F401
+                    cosearch_sweep, eval_sweep, multitenant_sweep,
+                    pipeline_sweep, solve_grid)
 from .workload import GemmOp, Partition, Task, uniform_partition  # noqa: F401

@@ -176,12 +176,28 @@ class Evaluator:
             cv[i] = bool(task.ops[i + 1].chained)
         self.chain_valid = cv
 
-        # Topology constants.
+        # Topology constants. The scalar fields stay (the HiGHS MILP
+        # formulation and external callers read them); the per-chiplet /
+        # per-entrance arrays below are what the phase equations divide
+        # by — for a homogeneous config every array broadcasts the
+        # scalar, so the arithmetic is bitwise-identical to the scalar
+        # code it replaced (same divisor element, same argmax).
         self.B = float(hw.bytes_per_elem)
         self.bw_nop = float(hw.bw_nop)
         self.bw_ent = float(top.bw_mem_per_entrance)
         self.freq = float(hw.freq_hz)
-        self.high_bw = self.bw_ent > self.bw_nop   # congestion regime
+        self.bw_nop_xy = top.bw_nop_xy.astype(np.float64)      # [X, Y]
+        self.freq_xy = top.freq_xy.astype(np.float64)          # [X, Y]
+        self.bw_ent_e = top.bw_mem_entrance.astype(np.float64)  # [E]
+        self.bw_nop_ent = top.bw_nop_entrance.astype(np.float64)  # [E]
+        # Redistribution runs along rows (step 1/2) and across adjacent
+        # rows (step 3): bottleneck at the slowest link on the path.
+        self.row_bw = self.bw_nop_xy.min(axis=1)               # [X]
+        self.cross_bw = (np.minimum(self.row_bw[:-1], self.row_bw[1:])
+                         if hw.X > 1 else self.row_bw[:0])     # [X-1]
+        self.bw_nop_min = float(self.bw_nop_xy.min())
+        self.high_bw = (float(self.bw_ent_e.max())
+                        > self.bw_nop_min)         # congestion regime
         self.hA = (top.hops_row_shared if self.high_bw else top.hops_low
                    ).astype(np.float64)            # A is row-shared
         self.hW = (top.hops_col_shared if self.high_bw else top.hops_low
@@ -247,7 +263,8 @@ class Evaluator:
         self, Px, Py, collectors, redist
     ) -> dict[str, np.ndarray]:
         hw, top = self.hw, self.top
-        B, bw_nop, bw_ent = self.B, self.bw_nop, self.bw_ent
+        B = self.B
+        bw_ent = self.bw_ent_e[None, None]                       # [1,1,E]
         X, Y = hw.X, hw.Y
         R, C = float(hw.R), float(hw.C)
         M, K, N = self.M, self.K, self.N
@@ -290,7 +307,8 @@ class Evaluator:
             nop_in_xy = None          # regime-only (tA/tW still feed energy)
             t_in = np.maximum(t_off_in, dist_done.max(axis=(-1, -2)))
         else:
-            nop_in_xy = (keepA[..., None, None] * tA_xy + tW_xy) / bw_nop
+            nop_in_xy = ((keepA[..., None, None] * tA_xy + tW_xy)
+                         / self.bw_nop_xy[None, None])
             t_in = np.maximum(t_off_in, nop_in_xy.max(axis=(-1, -2)))
 
         # ------------------------------------------------ phase 2: compute
@@ -300,7 +318,7 @@ class Evaluator:
         cyc = fill * tiles
         cyc = cyc + (self.epilogue[None, :, None, None]
                      * Px[:, :, :, None] * Py[:, :, None, :] / C)
-        t_comp_xy = cyc / self.freq
+        t_comp_xy = cyc / self.freq_xy[None, None]
         t_comp = t_comp_xy.max(axis=(-1, -2))
 
         # ----------------------------------------- phase 3a: offload path
@@ -320,7 +338,8 @@ class Evaluator:
             with np.errstate(divide="ignore", invalid="ignore"):
                 t_collect = np.where(
                     self.links[None, None] > 0,
-                    nonlocal_out / (self.links[None, None] * bw_nop),
+                    nonlocal_out
+                    / (self.links[None, None] * self.bw_nop_ent[None, None]),
                     0.0,
                 ).max(axis=-1)
             t_offload = np.maximum(t_collect, t_off_out)
@@ -333,10 +352,11 @@ class Evaluator:
         right_m = (yidx > cc).astype(np.float64)
         left_x = np.einsum("pnxy,pny->pnx", chunk, left_m)
         right_x = np.einsum("pnxy,pny->pnx", chunk, right_m)
-        t1 = np.maximum(left_x, right_x).max(axis=-1) / bw_nop
+        t1 = (np.maximum(left_x, right_x)
+              / self.row_bw[None, None]).max(axis=-1)
         # Step 2: broadcast the assembled row block along the row.
         rowbytes = Px * N[None, :, None] * B                     # [P,n,X]
-        t2 = rowbytes.max(axis=-1) / bw_nop
+        t2 = (rowbytes / self.row_bw[None, None]).max(axis=-1)
         # Step 3: column redistribution from Px_i to Px_{i+1}. Row counts of
         # consecutive ops may differ (pooling/im2col); compare normalized
         # cumulative fractions and scale by op-i bytes.
@@ -346,8 +366,8 @@ class Evaluator:
                     * M[None, :, None]) if X > 1 else \
             np.zeros_like(cumf[:, :, :0])
         cross_bytes = crossing * N[None, :, None] * B
-        t3 = (cross_bytes.max(axis=-1) / bw_nop) if X > 1 else \
-            np.zeros_like(t1)
+        t3 = ((cross_bytes / self.cross_bw[None, None]).max(axis=-1)
+              if X > 1 else np.zeros_like(t1))
         t_redist = t1 + t2 + t3
 
         t_out = np.where(redist_out > 0, t_redist, t_offload)
@@ -355,7 +375,8 @@ class Evaluator:
         # Output sync for softmax/layernorm-class ops: exchange of row
         # statistics across the chiplet row (small, eq.-9 convention).
         t_sync = (self.sync[None, :]
-                  * (Px.max(axis=-1) * 4.0 * B * max(Y - 1, 1)) / bw_nop)
+                  * (Px.max(axis=-1) * 4.0 * B * max(Y - 1, 1))
+                  / self.bw_nop_min)
 
         # ------------------------------------------------------- schedule
         if self.opts.async_exec:

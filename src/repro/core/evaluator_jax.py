@@ -57,14 +57,19 @@ EvalConsts = Dict[str, Any]
 CONST_KEYS = (
     # per-op [n]
     "M", "K", "N", "sync", "w_scale", "epilogue", "chain_valid",
-    # per-chiplet [X, Y]
-    "hA", "hW", "h_min",
-    # per-entrance
+    # per-chiplet [X, Y] (hop matrices + heterogeneous rate arrays;
+    # homogeneous configs broadcast the scalar rates, bitwise)
+    "hA", "hW", "h_min", "bw_nop_xy", "freq_xy",
+    # per-row/cross-row redistribution bottlenecks [X] / [X-1]
+    "row_bw", "cross_bw",
+    # per-entrance ("bw_ent" is the [E] off-chip share, "bw_nop_ent"
+    # the [E] entrance-link NoP rate)
     "row_mask", "col_mask", "ent_mask", "ent_pos", "is3d", "links",
+    "bw_ent", "bw_nop_ent",
     # link-level flow network (congestion="flow")
     "flow_cap", "dist_inc", "coll_inc",
     # scalars (0-d)
-    "B", "bw_nop", "bw_ent", "freq", "R", "C",
+    "B", "bw_nop_min", "R", "C",
     "e_sram", "e_mem", "e_nop", "e_mac",
 )
 
@@ -97,8 +102,10 @@ def consts_from_evaluator(ev) -> EvalConsts:
         "ent_mask": f8(ev.ent_mask), "ent_pos": f8(ev.ent_pos),
         "is3d": np.asarray(ev.top.entrance_is_3d, dtype=bool),
         "links": f8(ev.links),
-        "B": f8(ev.B), "bw_nop": f8(ev.bw_nop), "bw_ent": f8(ev.bw_ent),
-        "freq": f8(ev.freq),
+        "bw_nop_xy": f8(ev.bw_nop_xy), "freq_xy": f8(ev.freq_xy),
+        "row_bw": f8(ev.row_bw), "cross_bw": f8(ev.cross_bw),
+        "bw_ent": f8(ev.bw_ent_e), "bw_nop_ent": f8(ev.bw_nop_ent),
+        "B": f8(ev.B), "bw_nop_min": f8(ev.bw_nop_min),
         "R": f8(float(hw.R)), "C": f8(float(hw.C)),
         "e_sram": f8(hw.e_sram_bit * 8.0), "e_mem": f8(hw.e_mem_bit * 8.0),
         "e_nop": f8(hw.e_nop_bit_hop * 8.0), "e_mac": f8(hw.e_mac_cycle),
@@ -125,7 +132,9 @@ def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
     """
     n, X = Px.shape
     Y = Py.shape[1]
-    B, bw_nop, bw_ent = c["B"], c["bw_nop"], c["bw_ent"]
+    # "bw_ent" is the per-entrance [E] off-chip share; per-[n,E] terms
+    # divide by it with a plain last-axis broadcast.
+    B, bw_ent = c["B"], c["bw_ent"]
     R, C = c["R"], c["C"]
     M, K, N = c["M"], c["K"], c["N"]
     sync = c["sync"]
@@ -150,7 +159,8 @@ def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
 
     tA_xy = inA[:, :, None] * c["hA"][None]                    # bytes*hops
     tW_xy = inW[:, None, :] * c["hW"][None]
-    nop_in_xy = (keepA[:, None, None] * tA_xy + tW_xy) / bw_nop
+    nop_in_xy = ((keepA[:, None, None] * tA_xy + tW_xy)
+                 / c["bw_nop_xy"][None])
     t_nop_in = nop_in_xy.max(axis=(-1, -2))
 
     flow_mode = congestion == "flow"
@@ -190,7 +200,7 @@ def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
     cyc = fill * tiles
     cyc = cyc + c["epilogue"][:, None, None] * Px[:, :, None] \
         * Py[:, None, :] / C
-    t_comp_xy = cyc / c["freq"]
+    t_comp_xy = cyc / c["freq_xy"][None]
     t_comp = t_comp_xy.max(axis=(-1, -2))
 
     # ------------------------------------------- phase 3a: offload path
@@ -200,7 +210,8 @@ def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
     links = c["links"][None, :]
     links_safe = jnp.where(links > 0, links, 1.0)
     t_collect = jnp.where(
-        links > 0, nonlocal_out / (links_safe * bw_nop), 0.0
+        links > 0, nonlocal_out / (links_safe * c["bw_nop_ent"][None, :]),
+        0.0,
     ).max(axis=-1)
     t_off_out = (out_e / bw_ent).max(axis=-1)
     t_offload = jnp.maximum(t_coll_flow if flow_mode else t_collect,
@@ -213,15 +224,15 @@ def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
     right_m = (yidx > cc).astype(jnp.float64)
     left_x = jnp.einsum("nxy,ny->nx", chunk, left_m)
     right_x = jnp.einsum("nxy,ny->nx", chunk, right_m)
-    t1 = jnp.maximum(left_x, right_x).max(axis=-1) / bw_nop
+    t1 = (jnp.maximum(left_x, right_x) / c["row_bw"][None]).max(axis=-1)
     rowbytes = Px * N[:, None] * B                             # [n,X]
-    t2 = rowbytes.max(axis=-1) / bw_nop
+    t2 = (rowbytes / c["row_bw"][None]).max(axis=-1)
     cumf = jnp.cumsum(Px, axis=-1) / jnp.maximum(M[:, None], 1.0)
     cumf_next = jnp.concatenate([cumf[1:], cumf[-1:]], axis=0)
     if X > 1:
         crossing = jnp.abs(cumf - cumf_next)[:, : X - 1] * M[:, None]
         cross_bytes = crossing * N[:, None] * B
-        t3 = cross_bytes.max(axis=-1) / bw_nop
+        t3 = (cross_bytes / c["cross_bw"][None]).max(axis=-1)
     else:
         cross_bytes = jnp.zeros_like(cumf[:, :0])
         t3 = jnp.zeros_like(t1)
@@ -229,7 +240,8 @@ def _eval_single(c: EvalConsts, Px, Py, collectors, redist, *,
 
     t_out = jnp.where(redist_out > 0, t_redist, t_offload)
 
-    t_sync = sync * (Px.max(axis=-1) * 4.0 * B * max(Y - 1, 1)) / bw_nop
+    t_sync = (sync * (Px.max(axis=-1) * 4.0 * B * max(Y - 1, 1))
+              / c["bw_nop_min"])
 
     # ----------------------------------------------------- schedule
     if async_exec:

@@ -26,6 +26,7 @@ from . import topology as topo
 
 __all__ = [
     "MCMType",
+    "ChipletClass",
     "HWConfig",
     "Topology",
     "TABLE2",
@@ -65,6 +66,38 @@ TABLE2 = {
 
 
 @dataclasses.dataclass(frozen=True)
+class ChipletClass:
+    """One hardware class in a heterogeneous chiplet grid (SCAR-style).
+
+    A class scales the three per-chiplet rates relative to the package
+    baseline: ``freq_hz`` and ``bw_nop`` are absolute rates for chiplets
+    of this class, ``mem_scale`` multiplies the chiplet's share of the
+    off-chip bandwidth (1.0 = the homogeneous iso-split share). Defaults
+    reproduce the Table-2 baseline exactly, so a one-class grid is the
+    homogeneous machine.
+    """
+
+    name: str = "base"
+    freq_hz: float = TABLE2["freq_hz"]
+    bw_nop: float = TABLE2["bw_nop"]
+    mem_scale: float = 1.0
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        """Re-runnable rate validation (unpickling bypasses
+        ``__post_init__``; the serve firewall calls this directly)."""
+        for f in ("freq_hz", "bw_nop", "mem_scale"):
+            v = getattr(self, f)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or not np.isfinite(v) or v <= 0:
+                raise ValueError(
+                    f"ChipletClass.{f} must be a finite positive rate, "
+                    f"got {v!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class HWConfig:
     """``HW = {BW_nop, BW_mem, X, Y, R, C, type}`` — paper eq. in Sec 4.2.1.
 
@@ -89,12 +122,105 @@ class HWConfig:
     e_mem_bit: float = TABLE2["e_hbm_bit"]
     e_sram_bit: float = TABLE2["e_sram_bit"]
     e_mac_cycle: float = TABLE2["e_mac_cycle"]
+    # Heterogeneous chiplet grid (empty = homogeneous): a table of
+    # :class:`ChipletClass` rows plus a row-major ``[X·Y]`` assignment of
+    # each chiplet to a class index. Tuples keep the config hashable, so
+    # the hetero axes join every §9 fingerprint/cache key for free.
+    chiplet_classes: tuple = ()
+    class_assignment: tuple = ()
 
     def __post_init__(self):
+        # Normalize list inputs to tuples so equal configs hash equal.
+        if not isinstance(self.chiplet_classes, tuple):
+            object.__setattr__(self, "chiplet_classes",
+                               tuple(self.chiplet_classes))
+        if not isinstance(self.class_assignment, tuple):
+            object.__setattr__(self, "class_assignment",
+                               tuple(int(i) for i in self.class_assignment))
+        self.validate()
+
+    def validate(self) -> None:
+        """Full field validation, re-runnable on an already-constructed
+        instance (unpickling via ``__setstate__`` bypasses
+        ``__post_init__``, so the serve-layer BadRequest firewall calls
+        this explicitly on request ingress)."""
         if self.X < 1 or self.Y < 1:
             raise ValueError("grid must be at least 1x1")
         if self.R < 1 or self.C < 1:
             raise ValueError("systolic array must be at least 1x1")
+        for f in ("bw_nop", "bw_mem", "freq_hz"):
+            v = getattr(self, f)
+            if not np.isfinite(v) or v <= 0:
+                raise ValueError(
+                    f"HWConfig.{f} must be a finite positive rate, "
+                    f"got {v!r}")
+        classes, assign = self.chiplet_classes, self.class_assignment
+        if bool(classes) != bool(assign):
+            raise ValueError(
+                "chiplet_classes and class_assignment must be set "
+                "together (both empty = homogeneous)")
+        if not classes:
+            return
+        for c in classes:
+            if not isinstance(c, ChipletClass):
+                raise ValueError(
+                    f"chiplet_classes entries must be ChipletClass, "
+                    f"got {type(c).__name__}")
+            c.validate()
+        if len(assign) != self.X * self.Y:
+            raise ValueError(
+                f"class_assignment must have X*Y={self.X * self.Y} "
+                f"entries (row-major), got {len(assign)}")
+        n = len(classes)
+        for i in assign:
+            if not isinstance(i, (int, np.integer)) \
+                    or isinstance(i, bool) or not 0 <= i < n:
+                raise ValueError(
+                    f"class_assignment index {i!r} out of range for "
+                    f"{n} chiplet class(es)")
+
+    @classmethod
+    def hetero(cls, classes, assignment, **kw) -> "HWConfig":
+        """Heterogeneous constructor: ``classes`` is a sequence of
+        :class:`ChipletClass`, ``assignment`` the row-major ``[X·Y]``
+        class index per chiplet. One class broadcast everywhere is
+        bitwise-identical to the legacy scalar config — the migration
+        gate every engine is tested against."""
+        return cls(chiplet_classes=tuple(classes),
+                   class_assignment=tuple(int(i) for i in assignment),
+                   **kw)
+
+    @property
+    def is_hetero(self) -> bool:
+        return bool(self.chiplet_classes)
+
+    # Per-chiplet rate views ``[X, Y]`` (float64). Homogeneous configs
+    # broadcast the scalar fields, so downstream elementwise math is
+    # bitwise-identical to the scalar code it replaced; hetero configs
+    # gather the class table through the assignment.
+    @cached_property
+    def bw_nop_xy(self) -> np.ndarray:
+        if not self.is_hetero:
+            return np.full((self.X, self.Y), float(self.bw_nop))
+        vals = np.array([c.bw_nop for c in self.chiplet_classes])
+        return vals[np.array(self.class_assignment)].reshape(
+            self.X, self.Y)
+
+    @cached_property
+    def freq_xy(self) -> np.ndarray:
+        if not self.is_hetero:
+            return np.full((self.X, self.Y), float(self.freq_hz))
+        vals = np.array([c.freq_hz for c in self.chiplet_classes])
+        return vals[np.array(self.class_assignment)].reshape(
+            self.X, self.Y)
+
+    @cached_property
+    def mem_scale_xy(self) -> np.ndarray:
+        if not self.is_hetero:
+            return np.ones((self.X, self.Y))
+        vals = np.array([c.mem_scale for c in self.chiplet_classes])
+        return vals[np.array(self.class_assignment)].reshape(
+            self.X, self.Y)
 
     @property
     def n_chiplets(self) -> int:
@@ -176,6 +302,17 @@ class Topology:
         # Per-entrance memory bandwidth share (iso-total-bandwidth).
         self.bw_mem_per_entrance = hw.bw_mem / self.n_entrances
 
+        # Per-chiplet / per-entrance rate arrays (hetero grids; for a
+        # homogeneous config these broadcast the scalars bitwise — the
+        # ``* 1.0`` mem scale and equal-element arrays change nothing).
+        self.bw_nop_xy = hw.bw_nop_xy                       # [X, Y]
+        self.freq_xy = hw.freq_xy                           # [X, Y]
+        ex = np.array([e[0] for e in ents])
+        ey = np.array([e[1] for e in ents])
+        self.bw_nop_entrance = self.bw_nop_xy[ex, ey]       # [E]
+        self.bw_mem_entrance = (
+            self.bw_mem_per_entrance * hw.mem_scale_xy[ex, ey])  # [E]
+
         # Chiplets per entrance group (for collection-link sharing).
         self.group_size = np.bincount(
             self.entrance_id.ravel(), minlength=self.n_entrances
@@ -240,7 +377,8 @@ class Topology:
             dist[:, ports] = 0.0
             coll[:, ports] = 0.0
             self._flow_net = (
-                g.link_caps(hw.bw_nop, hw.bw_mem, attach),
+                g.link_caps(hw.bw_nop_xy.ravel(), hw.bw_mem, attach,
+                            mem_scale=hw.mem_scale_xy.ravel()),
                 dist,
                 coll,
             )

@@ -213,6 +213,13 @@ def run_miqp(
 
         return miqp_jax.solve_lattice_batch(
             [task], [hw], options, objective, cfg)[0]
+    if hw.is_hetero:
+        # The HiGHS formulation linearizes against the package-scalar
+        # rates; per-chiplet rates need the lattice engine, which scores
+        # through the (hetero-exact) evaluator constants.
+        raise ValueError(
+            "engine='milp' models homogeneous grids only; use "
+            "engine='lattice' for heterogeneous chiplet classes")
     ev = Evaluator(task, hw, options)
     if objective == "latency":
         try:

@@ -78,21 +78,33 @@ class MeshNet:
     ``link_caps`` array over the full batchable link space.
     """
 
-    def __init__(self, X: int, Y: int, bw_nop: float, bw_mem: float,
-                 attach: list[int]):
+    def __init__(self, X: int, Y: int, bw_nop, bw_mem: float,
+                 attach: list[int], mem_scale=None):
         self.X, self.Y = X, Y
         self.graph = MeshGraph(X, Y)
         self.mem = self.graph.mem
         self.attach = attach
-        self.bw_nop = float(bw_nop)
+        # ``bw_nop`` may be per-chiplet (``[X, Y]`` or ``[X·Y]``) for
+        # heterogeneous grids; a mesh link runs at the min of its
+        # endpoint rates. Scalars keep the historical float attribute.
+        b = np.asarray(bw_nop, dtype=np.float64)
+        self.bw_nop = float(b) if b.ndim == 0 else b.reshape(-1)
         self.bw_mem = float(bw_mem)
+        self.mem_scale = (None if mem_scale is None
+                          else np.asarray(mem_scale,
+                                          dtype=np.float64).reshape(-1))
+        per_node = (np.full(X * Y, float(bw_nop)) if b.ndim == 0
+                    else b.reshape(-1))
         self.cap: dict[tuple[int, int], float] = {}
         for (u, v) in self.graph.links[: self.graph.n_mesh_links_directed]:
-            self.cap[(u, v)] = bw_nop
+            self.cap[(u, v)] = min(per_node[u], per_node[v])
         # memory interface link(s): capacity = memory BW split across ports
         for a in attach:
-            self.cap[(self.mem, a)] = bw_mem / len(attach)
-            self.cap[(a, self.mem)] = bw_mem / len(attach)
+            share = bw_mem / len(attach)
+            if self.mem_scale is not None:
+                share = share * self.mem_scale[a]
+            self.cap[(self.mem, a)] = share
+            self.cap[(a, self.mem)] = share
 
     def node_rc(self, n: int) -> tuple[int, int]:
         return divmod(n, self.Y)
@@ -106,7 +118,8 @@ class MeshNet:
     # ------------------------------------------------------- dense views
     def link_caps(self) -> np.ndarray:
         """Capacities over the full :class:`MeshGraph` link space [L]."""
-        return self.graph.link_caps(self.bw_nop, self.bw_mem, self.attach)
+        return self.graph.link_caps(self.bw_nop, self.bw_mem, self.attach,
+                                    mem_scale=self.mem_scale)
 
     def pull_incidence(self) -> np.ndarray:
         """[n_flows, n_links] incidence of the all-chiplets-pull flows."""

@@ -468,9 +468,20 @@ def eval_sweep(
 
 
 # ------------------------------------------------------ batched netsim
+def _rate_fp(v):
+    """Fingerprint component for a scalar-or-array rate: heterogeneous
+    per-chiplet capacities key by content bytes, scalars stay plain
+    floats (so every pre-hetero cache key is unchanged)."""
+    a = np.asarray(v, dtype=np.float64)
+    return float(a) if a.ndim == 0 else a.tobytes()
+
+
 def _netsim_fingerprint(net, message_bytes: float, backend: str) -> tuple:
-    return ("netsim", backend, net.X, net.Y, float(net.bw_nop),
-            float(net.bw_mem), tuple(net.attach), float(message_bytes))
+    ms = getattr(net, "mem_scale", None)
+    return ("netsim", backend, net.X, net.Y, _rate_fp(net.bw_nop),
+            float(net.bw_mem),
+            None if ms is None else _rate_fp(ms),
+            tuple(net.attach), float(message_bytes))
 
 
 def netsim_sweep(
@@ -590,10 +601,13 @@ def _copy_solver_record(rec):
     from .cosearch import CoSearchResult
     from .ga import GAResult
     from .miqp import MIQPResult
+    from .multitenant import MultiTenantResult
     from .pipelining import PipelineResult
 
     if isinstance(rec, PipelineResult):
         return _dc.replace(rec)      # all fields immutable scalars
+    if isinstance(rec, MultiTenantResult):
+        return rec.copy()
     if isinstance(rec, CoSearchResult):
         return CoSearchResult(
             partition=rec.partition.copy(),
@@ -688,9 +702,14 @@ def solve_grid(
         return cosearch_sweep(points, objective=objective, cfg=cfg,
                               backend=backend, cache=cache,
                               devices=devices)
+    if method == "multitenant":
+        return multitenant_sweep(points, objective=objective, cfg=cfg,
+                                 backend=backend, cache=cache,
+                                 devices=devices)
     if method != "ga":
         raise ValueError(f"unknown method {method!r}; "
-                         f"one of ('ga', 'miqp', 'cosearch')")
+                         f"one of ('ga', 'miqp', 'cosearch', "
+                         f"'multitenant')")
     from .evaluator import resolve_auto_backend
     from .ga import GAConfig, run_ga
 
@@ -839,6 +858,111 @@ def cosearch_sweep(
                 devices=devices)
             for i, out in zip(idxs, outs):
                 records[i] = out
+
+    if cache:
+        for i in todo:
+            _CACHE[fps[i]] = _copy_solver_record(records[i])
+    return records
+
+
+# ---------------------------------------------- multi-tenant placement
+@dataclasses.dataclass
+class MultiTenantPoint:
+    """One grid point of the multi-tenant placement sweep (DESIGN.md
+    §18): several co-resident tasks on ONE (possibly heterogeneous)
+    package, searched by ``solve_grid(method="multitenant")``."""
+
+    tasks: tuple
+    hw: HWConfig
+    options: EvalOptions = EvalOptions()
+
+
+def _multitenant_fingerprint(pt: MultiTenantPoint, backend: str,
+                             objective: str, cfg) -> tuple:
+    """Cache key for a multi-tenant search: tenant task tuple (order
+    matters — bands are assigned in tenant order), the full hetero
+    HWConfig (chiplet classes/assignment are hashable fields), and the
+    frozen config with the §15 devices knob stripped at both levels
+    (the outer config and the nested inner-solver config)."""
+    inner = _strip_devices(cfg.cfg)
+    return (
+        "multitenant", backend,
+        tuple(_task_fingerprint(t) for t in pt.tasks),
+        pt.hw,
+        _strip_devices(pt.options),
+        objective,
+        _strip_devices(dataclasses.replace(cfg, cfg=inner)),
+    )
+
+
+def multitenant_sweep(
+    points: Sequence[MultiTenantPoint],
+    objective: str = "edp",
+    cfg=None,
+    backend: str = "jax",
+    cache: bool = True,
+    devices: str | None = None,
+    checkpoint=None,
+    checkpoint_every: int = 8,
+    straggler=None,
+) -> list:
+    """Run one multi-tenant placement search per point; returns
+    :class:`repro.core.multitenant.MultiTenantResult` records aligned
+    with ``points`` — also reachable as
+    ``solve_grid(method="multitenant")`` (DESIGN.md §18).
+
+    The outer assignment loop is a host loop (band compositions are
+    few); the inner per-tenant solves and exact re-scores go through
+    :func:`solve_grid` / :func:`eval_sweep`, so they batch per region
+    shape and share the process cache — identical region solves across
+    assignments (and across points) dedupe to one engine call. All
+    budgets are deterministic counts, so records obey the §9 solo ==
+    batched == served contract.
+
+    ``checkpoint`` / ``straggler`` follow the §15 contract; ``devices``
+    threads through to the inner engines and is fingerprint-invisible."""
+    from .multitenant import MultiTenantConfig, solve_multitenant
+
+    if cfg is None:
+        cfg = MultiTenantConfig()
+    if not isinstance(cfg, MultiTenantConfig):
+        raise TypeError(f"multitenant_sweep needs a MultiTenantConfig, "
+                        f"got {type(cfg).__name__}")
+    if backend == "auto":
+        backend = "jax"
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"one of ('numpy', 'jax', 'auto')")
+    ckpt = _resolve_checkpoint(checkpoint, checkpoint_every)
+    if ckpt is not None:
+        if not cache:
+            raise ValueError("checkpointing requires cache=True — "
+                             "records persist through the result cache")
+        return _checkpointed(
+            points, ckpt, straggler,
+            lambda c: multitenant_sweep(c, objective, cfg,
+                                        backend=backend, cache=True,
+                                        devices=devices))
+    records: list = [None] * len(points)
+    todo: list[int] = []
+    fps: list[tuple | None] = [None] * len(points)
+    for i, pt in enumerate(points):
+        if cache:
+            fp = _multitenant_fingerprint(pt, backend, objective, cfg)
+            fps[i] = fp
+            hit = _CACHE.get(fp)
+            if hit is not None:
+                _STATS["hits"] += 1
+                records[i] = _copy_solver_record(hit)
+                continue
+            _STATS["misses"] += 1
+        todo.append(i)
+
+    for i in todo:
+        pt = points[i]
+        records[i] = solve_multitenant(
+            pt.tasks, pt.hw, objective, pt.options, cfg,
+            backend=backend, cache=cache, devices=devices)
 
     if cache:
         for i in todo:

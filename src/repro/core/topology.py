@@ -287,15 +287,34 @@ class MeshGraph:
                             None if assign is None else int(assign[s]))
             for s in range(self.n_nodes)])
 
-    def link_caps(self, bw_nop: float, bw_mem: float,
-                  attach: list[int]) -> np.ndarray:
+    def link_caps(self, bw_nop, bw_mem: float, attach: list[int],
+                  mem_scale=None) -> np.ndarray:
         """Per-link capacities ``[n_links]``: mesh links at ``bw_nop``,
         every memory port at ``bw_mem / len(attach)`` (iso-total-bandwidth
         split; non-attach ports carry no flows, so their value is inert
-        but keeps the array batchable across attachment sets)."""
-        cap = np.full(self.n_links, float(bw_nop), dtype=np.float64)
+        but keeps the array batchable across attachment sets).
+
+        ``bw_nop`` may be a per-chiplet ``[n_nodes]`` array (heterogeneous
+        grids): a mesh link then runs at the min of its endpoint rates.
+        ``mem_scale`` (optional ``[n_nodes]``) scales each chiplet's port
+        share. With equal-element arrays both reduce bitwise to the
+        scalar capacities."""
+        b = np.asarray(bw_nop, dtype=np.float64)
+        cap = np.empty(self.n_links, dtype=np.float64)
+        n_mesh = self.n_mesh_links_directed
+        if b.ndim == 0:
+            cap[:n_mesh] = b
+        elif n_mesh:
+            uv = np.asarray(self.links[:n_mesh])
+            cap[:n_mesh] = np.minimum(b[uv[:, 0]], b[uv[:, 1]])
         per_port = float(bw_mem) / max(len(attach), 1)
-        cap[self.n_mesh_links_directed:] = per_port
+        if mem_scale is None:
+            cap[n_mesh:] = per_port
+        else:
+            s = np.asarray(mem_scale, dtype=np.float64)
+            node = np.arange(self.n_nodes)
+            cap[n_mesh:] = np.concatenate(
+                [per_port * s[node], per_port * s[node]])
         return cap
 
     def mesh_link_mask(self) -> np.ndarray:

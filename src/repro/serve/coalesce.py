@@ -33,13 +33,14 @@ from ..core.cosearch import CoSearchConfig
 from ..core.evaluator import EvalOptions
 from ..core.ga import GAConfig
 from ..core.miqp import MIQPConfig
+from ..core.multitenant import MultiTenantConfig
 from ..core.pipelining import PipelineConfig
 
 __all__ = ["BadRequest", "OptRequest", "CallKey", "group_requests",
            "KINDS", "SOLVE_METHODS", "OBJECTIVES"]
 
 KINDS = ("eval", "solve", "pipeline")
-SOLVE_METHODS = ("ga", "miqp", "cosearch")
+SOLVE_METHODS = ("ga", "miqp", "cosearch", "multitenant")
 OBJECTIVES = ("latency", "energy", "edp")
 _BACKENDS = ("numpy", "jax", "auto")
 
@@ -108,6 +109,10 @@ class OptRequest:
             return ("pipeline", len(self.point.segments),
                     int(self.point.batch))
         pt = self.point
+        if self.kind == "solve" and self.method == "multitenant":
+            return (self.kind, "multitenant",
+                    tuple(len(t) for t in pt.tasks),
+                    pt.hw.X, pt.hw.Y, pt.hw.mcm_type.value, pt.options)
         return (self.kind, len(pt.task), pt.hw.X, pt.hw.Y,
                 pt.hw.mcm_type.value, pt.options)
 
@@ -125,6 +130,8 @@ class OptRequest:
                              "('numpy' | 'jax')")
         if self.kind == "pipeline":
             self._validate_pipeline()
+        elif self.kind == "solve" and self.method == "multitenant":
+            self._validate_multitenant_point()
         else:
             self._validate_eval_point()
         if self.kind == "solve":
@@ -135,7 +142,8 @@ class OptRequest:
                 raise BadRequest(f"unknown objective {self.objective!r}; "
                                  f"one of {OBJECTIVES}")
             want = {"ga": GAConfig, "miqp": MIQPConfig,
-                    "cosearch": CoSearchConfig}[self.method]
+                    "cosearch": CoSearchConfig,
+                    "multitenant": MultiTenantConfig}[self.method]
             if self.cfg is not None and not isinstance(self.cfg, want):
                 raise BadRequest(
                     f"cfg for method={self.method!r} must be "
@@ -153,8 +161,45 @@ class OptRequest:
                              f"got {type(pt).__name__}")
         if not isinstance(pt.options, EvalOptions):
             raise BadRequest("point.options must be EvalOptions")
+        self._validate_hw(pt.hw)
         if self.kind == "eval" and pt.partition is not None:
             self._validate_partition(pt)
+
+    def _validate_hw(self, hw) -> None:
+        """Re-run the full :meth:`HWConfig.validate` field checks —
+        unpickling (the transport every remote request rides in on)
+        bypasses ``__post_init__``, so corrupted hetero fields (wrong
+        assignment length, nonpositive class rates, out-of-range
+        indices) would otherwise reach a batched worker call."""
+        try:
+            hw.validate()
+        except ValueError as e:
+            raise BadRequest(f"invalid hardware config: {e}") from e
+        except Exception as e:
+            raise BadRequest(f"point.hw is not a valid HWConfig: "
+                             f"{e}") from e
+
+    def _validate_multitenant_point(self) -> None:
+        from ..core.workload import Task
+
+        pt = self.point
+        if not isinstance(pt, sweep.MultiTenantPoint):
+            raise BadRequest(
+                f"solve method='multitenant' needs a MultiTenantPoint, "
+                f"got {type(pt).__name__}")
+        if not isinstance(pt.options, EvalOptions):
+            raise BadRequest("point.options must be EvalOptions")
+        self._validate_hw(pt.hw)
+        if not isinstance(pt.tasks, tuple) or not pt.tasks:
+            raise BadRequest("multitenant point needs a non-empty "
+                             "tuple of tenant tasks")
+        for t in pt.tasks:
+            if not isinstance(t, Task) or len(t) < 1:
+                raise BadRequest("every tenant must be a non-empty Task")
+        if len(pt.tasks) > pt.hw.X:
+            raise BadRequest(
+                f"{len(pt.tasks)} tenants need {len(pt.tasks)} row "
+                f"bands but the grid has X={pt.hw.X} rows")
 
     def _validate_partition(self, pt) -> None:
         """Vectorized mirror of :meth:`Partition.validate` — the

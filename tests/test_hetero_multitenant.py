@@ -1,0 +1,494 @@
+"""Heterogeneous chiplet grids + multi-tenant placement (DESIGN.md §18).
+
+Covers the hardware-is-data refactor end to end:
+
+  * migration gate — a one-class heterogeneous config broadcast over the
+    grid is *bitwise* identical to the legacy scalar config across every
+    engine family (evaluator regime/flow × numpy/jax, GA, MIQP lattice,
+    pipelining, co-search);
+  * drift gates — every ``HWConfig`` dataclass field must appear in
+    ``__getstate__`` and perturb the §9 sweep fingerprint;
+  * validation — hetero field checks at construction and again at the
+    serve-layer BadRequest firewall (unpickling bypasses
+    ``__post_init__``);
+  * waterfilling — per-link capacity conservation under hetero caps;
+  * multi-tenant — band enumeration properties (disjoint, covering,
+    even split always present) and the never-worse-than-even-split
+    search invariant.
+"""
+import dataclasses
+import pickle
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (ChipletClass, EvalOptions, Evaluator, GemmOp,
+                        HWConfig, MultiTenantConfig, Task,
+                        uniform_partition)
+from repro.core import multitenant, netsim, sweep
+from repro.core.cosearch import CoSearchConfig
+from repro.core.ga import GAConfig
+from repro.core.hw import TABLE2
+from repro.core.miqp import MIQPConfig, run_miqp
+from repro.core.pipelining import pipeline_batch
+from repro.serve.coalesce import BadRequest, OptRequest
+
+
+def toy_task(n=3, m=512, name=None):
+    ops = [GemmOp("g0", M=m, K=256, N=512)]
+    for i in range(1, n):
+        ops.append(GemmOp(f"g{i}", M=m, K=ops[-1].N, N=512, chained=True))
+    return Task(name or f"toy{n}_{m}", ops)
+
+
+def broadcast_hw(**kw):
+    """One default class on every chiplet — must equal HWConfig(**kw)
+    bitwise everywhere (the migration gate)."""
+    hw = HWConfig(**kw)
+    return HWConfig.hetero([ChipletClass()], [0] * (hw.X * hw.Y), **kw)
+
+
+def two_class_hw(**kw):
+    fast = ChipletClass("fast", freq_hz=2e9, bw_nop=120e9)
+    slow = ChipletClass("slow", freq_hz=0.5e9, bw_nop=30e9,
+                        mem_scale=0.5)
+    hw = HWConfig(**kw)
+    half = hw.X * hw.Y // 2
+    return HWConfig.hetero([fast, slow], [0] * half + [1] * half, **kw)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    sweep.clear_cache()
+    yield
+    sweep.clear_cache()
+
+
+# ------------------------------------------------------------ validation
+def test_chiplet_class_validation():
+    ChipletClass().validate()  # defaults valid
+    for bad in (dict(bw_nop=0.0), dict(bw_nop=-1.0),
+                dict(freq_hz=float("nan")), dict(freq_hz=float("inf")),
+                dict(mem_scale=0.0), dict(freq_hz=True)):
+        with pytest.raises(ValueError):
+            ChipletClass(**bad)
+
+
+def test_hetero_validation_rejections():
+    c = ChipletClass()
+    with pytest.raises(ValueError, match="set.*together"):
+        HWConfig(chiplet_classes=(c,))
+    with pytest.raises(ValueError, match="set.*together"):
+        HWConfig(class_assignment=(0,) * 16)
+    with pytest.raises(ValueError, match="X\\*Y=16"):
+        HWConfig.hetero([c], [0] * 5)
+    with pytest.raises(ValueError, match="out of range"):
+        HWConfig.hetero([c], [0] * 15 + [1])
+    with pytest.raises(ValueError, match="ChipletClass"):
+        HWConfig(chiplet_classes=("fast",), class_assignment=(0,) * 16)
+    with pytest.raises(ValueError, match="finite positive"):
+        HWConfig(bw_nop=-1.0)
+
+
+def test_hetero_accepts_lists_and_numpy_indices():
+    c = ChipletClass()
+    hw = HWConfig(chiplet_classes=[c],
+                  class_assignment=list(np.zeros(16, dtype=np.int64)))
+    assert hw.chiplet_classes == (c,)
+    assert hw.class_assignment == (0,) * 16
+    assert hw == broadcast_hw()  # normalization → hashable equality
+    assert hash(hw) == hash(broadcast_hw())
+
+
+def test_rate_views_shapes_and_values():
+    hw = two_class_hw()
+    assert hw.is_hetero
+    assert hw.bw_nop_xy.shape == (4, 4)
+    np.testing.assert_array_equal(hw.bw_nop_xy[:2], 120e9)
+    np.testing.assert_array_equal(hw.bw_nop_xy[2:], 30e9)
+    np.testing.assert_array_equal(hw.freq_xy[:2], 2e9)
+    np.testing.assert_array_equal(hw.mem_scale_xy[2:], 0.5)
+    homo = HWConfig()
+    assert not homo.is_hetero
+    np.testing.assert_array_equal(homo.bw_nop_xy,
+                                  np.full((4, 4), homo.bw_nop))
+
+
+# ----------------------------------------------------------- drift gates
+def test_getstate_covers_every_declared_field():
+    """New HWConfig fields must join the pickle state (the sweep-cache
+    store round-trips configs by value) — this fails the moment a field
+    is added without extending the declared-field contract."""
+    hw = two_class_hw()
+    state = hw.__getstate__()
+    names = {f.name for f in dataclasses.fields(HWConfig)}
+    assert set(state) == names
+    clone = pickle.loads(pickle.dumps(hw))
+    assert clone == hw and hash(clone) == hash(hw)
+    assert "topology" not in pickle.dumps(hw).decode("latin1")
+
+
+# Two valid HWConfigs differing ONLY in the named field. Every dataclass
+# field needs a row: the test below fails on a new field until a
+# fingerprint-sensitivity witness is added — which is exactly the moment
+# to check the new axis actually reaches the §9 cache key.
+_BASE2 = dict(chiplet_classes=(ChipletClass(), ChipletClass(bw_nop=3e10)),
+              class_assignment=(0,) * 16)
+_FP_VARIANTS = {
+    "bw_nop": ({}, {"bw_nop": 2 * TABLE2["bw_nop"]}),
+    "bw_mem": ({}, {"bw_mem": 2 * TABLE2["bw_hbm"]}),
+    "X": ({}, {"X": 5}),
+    "Y": ({}, {"Y": 5}),
+    "R": ({}, {"R": 8}),
+    "C": ({}, {"C": 8}),
+    "mcm_type": ({}, {"mcm_type": "B"}),
+    "diagonal_links": ({}, {"diagonal_links": True}),
+    "freq_hz": ({}, {"freq_hz": 2 * TABLE2["freq_hz"]}),
+    "bytes_per_elem": ({}, {"bytes_per_elem": 2}),
+    "e_nop_bit_hop": ({}, {"e_nop_bit_hop": 1e-12}),
+    "e_mem_bit": ({}, {"e_mem_bit": 1e-12}),
+    "e_sram_bit": ({}, {"e_sram_bit": 1e-12}),
+    "e_mac_cycle": ({}, {"e_mac_cycle": 1e-12}),
+    "chiplet_classes": (
+        _BASE2,
+        {**_BASE2,
+         "chiplet_classes": (ChipletClass(bw_nop=4.5e10),
+                             ChipletClass(bw_nop=3e10))}),
+    "class_assignment": (
+        _BASE2, {**_BASE2, "class_assignment": (1,) * 16}),
+}
+
+
+def test_fingerprint_covers_every_hw_field():
+    task = toy_task(2)
+    missing = ({f.name for f in dataclasses.fields(HWConfig)}
+               - set(_FP_VARIANTS))
+    assert not missing, (
+        f"HWConfig grew fields {sorted(missing)} with no fingerprint "
+        f"witness — add a _FP_VARIANTS row proving the new axis reaches "
+        f"the sweep cache key")
+    for field, (kw_a, kw_b) in _FP_VARIANTS.items():
+        hw_a, hw_b = HWConfig(**kw_a), HWConfig(**kw_b)
+        assert getattr(hw_a, field) != getattr(hw_b, field), field
+        fa = sweep._point_fingerprint(
+            sweep.EvalPoint(task, hw_a), "numpy")
+        fb = sweep._point_fingerprint(
+            sweep.EvalPoint(task, hw_b), "numpy")
+        assert fa != fb, f"fingerprint blind to HWConfig.{field}"
+
+
+def test_netsim_fingerprint_handles_hetero_rates():
+    scalar = netsim.MeshNet(4, 4, 256e9 / 2, 8e12, [0])
+    caps = np.linspace(1e9, 2e9, 16)
+    het = netsim.MeshNet(4, 4, caps, 8e12, [0],
+                         mem_scale=np.linspace(0.5, 1.0, 16))
+    fp_s = sweep._netsim_fingerprint(scalar, 1e6, "numpy")
+    fp_h = sweep._netsim_fingerprint(het, 1e6, "numpy")
+    assert fp_s != fp_h
+    assert hash(fp_h) == hash(fp_h)  # tuple is hashable (tobytes, not array)
+
+
+# -------------------------------------- migration gate: bitwise parity
+def _assert_records_bitwise(ra, rb):
+    assert set(ra) == set(rb)
+    for k in ra:
+        va, vb = ra[k], rb[k]
+        if isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb, err_msg=k)
+        elif isinstance(va, float):
+            assert va == vb, (k, va, vb)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("congestion", ["regime", "flow"])
+def test_eval_parity_broadcast_vs_scalar(backend, congestion):
+    opts = EvalOptions(redistribution=True, async_exec=True,
+                       congestion=congestion)
+    task = toy_task(3)
+    for mcm in ("A", "B"):
+        hw_s = HWConfig(mcm_type=mcm)
+        hw_b = broadcast_hw(mcm_type=mcm)
+        rec_s, = sweep.eval_sweep([sweep.EvalPoint(task, hw_s, opts)],
+                                  backend=backend, cache=False)
+        rec_b, = sweep.eval_sweep([sweep.EvalPoint(task, hw_b, opts)],
+                                  backend=backend, cache=False)
+        _assert_records_bitwise(rec_s, rec_b)
+
+
+def test_eval_hetero_actually_differs():
+    """Guard against the parity gate passing vacuously: a genuinely
+    heterogeneous grid must change the score."""
+    task = toy_task(3)
+    r_s, = sweep.eval_sweep([sweep.EvalPoint(task, HWConfig())],
+                            backend="numpy", cache=False)
+    r_h, = sweep.eval_sweep([sweep.EvalPoint(task, two_class_hw())],
+                            backend="numpy", cache=False)
+    assert r_s["edp"] != r_h["edp"]
+
+
+def test_ga_parity_broadcast_vs_scalar():
+    cfg = GAConfig(population=16, generations=8, elite=2, patience=4,
+                   seed=0)
+    task = toy_task(2)
+    rec_s, = sweep.solve_grid([sweep.EvalPoint(task, HWConfig())],
+                              objective="edp", cfg=cfg, backend="jax",
+                              cache=False)
+    rec_b, = sweep.solve_grid([sweep.EvalPoint(task, broadcast_hw())],
+                              objective="edp", cfg=cfg, backend="jax",
+                              cache=False)
+    assert rec_s.objective == rec_b.objective
+    np.testing.assert_array_equal(rec_s.partition.Px, rec_b.partition.Px)
+    np.testing.assert_array_equal(rec_s.partition.Py, rec_b.partition.Py)
+    np.testing.assert_array_equal(rec_s.redist_mask, rec_b.redist_mask)
+
+
+def test_miqp_lattice_parity_broadcast_vs_scalar():
+    cfg = MIQPConfig(engine="lattice", candidate_budget=512,
+                     eval_budget=2048, beam_width=4, refine_sweeps=1,
+                     pair_refine=8, descent_sweeps=2,
+                     max_axis_candidates=16, max_layer_candidates=32,
+                     score_chunk=256, backend="numpy")
+    task = toy_task(2)
+    rec_s = run_miqp(task, HWConfig(), "edp", cfg=cfg)
+    rec_b = run_miqp(task, broadcast_hw(), "edp", cfg=cfg)
+    assert rec_s.objective == rec_b.objective
+    np.testing.assert_array_equal(rec_s.partition.Px, rec_b.partition.Px)
+    np.testing.assert_array_equal(rec_s.partition.Py, rec_b.partition.Py)
+
+
+def test_cosearch_parity_broadcast_vs_scalar():
+    cfg = CoSearchConfig(population=16, generations=8, batch=2,
+                         archive_size=8, seed=0)
+    task = toy_task(2)
+    rec_s, = sweep.cosearch_sweep([sweep.EvalPoint(task, HWConfig())],
+                                  objective="edp", cfg=cfg, cache=False)
+    rec_b, = sweep.cosearch_sweep(
+        [sweep.EvalPoint(task, broadcast_hw())],
+        objective="edp", cfg=cfg, cache=False)
+    assert (rec_s.objective, rec_s.edp, rec_s.latency, rec_s.energy) \
+        == (rec_b.objective, rec_b.edp, rec_b.latency, rec_b.energy)
+    np.testing.assert_array_equal(rec_s.partition.Px, rec_b.partition.Px)
+    assert rec_s.diagonal == rec_b.diagonal
+
+
+def test_pipelining_parity_broadcast_vs_scalar():
+    task = toy_task(3)
+    segs = []
+    for hw in (HWConfig(), broadcast_hw()):
+        res = Evaluator(task, hw).evaluate(
+            uniform_partition(task, hw.X, hw.Y))
+        segs.append(res.segments())
+    assert segs[0] == segs[1]  # durations bitwise equal
+    pa = pipeline_batch(segs[0], batch=4)
+    pb = pipeline_batch(segs[1], batch=4)
+    assert (pa.sequential, pa.pipelined) == (pb.sequential, pb.pipelined)
+
+
+def test_milp_engine_rejects_hetero():
+    with pytest.raises(ValueError, match="homogeneous"):
+        run_miqp(toy_task(2), two_class_hw(), engine="milp")
+
+
+# -------------------------------------------------- hetero waterfilling
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1))
+def test_waterfill_conserves_per_link_capacity(seed):
+    """No link ever carries more than cap × latency, for arbitrary
+    per-chiplet NoP rates and per-port memory scales."""
+    rng = np.random.default_rng(seed)
+    X = Y = 3
+    caps_nop = rng.uniform(1e9, 8e9, X * Y)
+    mem_scale = rng.uniform(0.25, 1.0, X * Y)
+    net = netsim.MeshNet(X, Y, caps_nop, 16e9, [0, 4],
+                         mem_scale=mem_scale)
+    inc = net.pull_incidence()
+    cap = net.link_caps()
+    demand = rng.uniform(0.0, 1e6, X * Y)
+    demand[rng.uniform(size=X * Y) < 0.3] = 0.0
+    if not demand.any():
+        demand[0] = 1e6
+    out = netsim.simulate_flows(inc, cap, demand)
+    lat = out["latency"]
+    assert lat > 0
+    assert (out["link_bytes"] <= cap * lat * (1 + 1e-9) + 1e-6).all()
+    # every flow's bytes arrived
+    assert out["done"][demand > 0].max() <= lat * (1 + 1e-12)
+
+
+def test_mesh_links_run_at_min_endpoint_rate():
+    caps_nop = np.arange(1, 17, dtype=float) * 1e9
+    net = netsim.MeshNet(4, 4, caps_nop, 8e12, [0])
+    for (u, v), c in net.cap.items():
+        if net.mem in (u, v):
+            continue
+        assert c == min(caps_nop[u], caps_nop[v])
+
+
+# ----------------------------------------------------- tenant geometry
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(1, 40))
+def test_band_assignments_disjoint_and_covering(X, T, cap):
+    if T > X:
+        with pytest.raises(ValueError):
+            multitenant.band_assignments(X, T, cap)
+        return
+    asg = multitenant.band_assignments(X, T, cap)
+    assert 1 <= len(asg) <= cap
+    even = multitenant.even_split_assignment(X, T)
+    assert even in asg  # baseline always in the candidate set
+    for bands in asg:
+        assert len(bands) == T
+        edges = [0] + [b[1] for b in bands]
+        for (x0, x1), e in zip(bands, edges):
+            assert x0 == e and x1 > x0  # contiguous, non-empty, ordered
+        assert bands[-1][1] == X  # covering
+
+
+def test_region_hw_slices_assignment_and_shares_bw():
+    hw = two_class_hw()
+    top = multitenant.region_hw(hw, 0, 2)
+    bot = multitenant.region_hw(hw, 2, 4)
+    assert top.X == bot.X == 2 and top.Y == 4
+    assert top.bw_mem == bot.bw_mem == hw.bw_mem / 2
+    assert set(top.class_assignment) == {0}
+    assert set(bot.class_assignment) == {1}
+    top.validate()
+    with pytest.raises(ValueError):
+        multitenant.region_hw(hw, 3, 3)
+    homo = multitenant.region_hw(HWConfig(), 1, 4)
+    assert homo.X == 3 and not homo.is_hetero
+
+
+# --------------------------------------------------- multi-tenant search
+def test_solve_multitenant_never_worse_than_even_split():
+    tasks = [toy_task(2, 256, "tenant_a"), toy_task(3, 512, "tenant_b")]
+    hw = two_class_hw()
+    cfg = MultiTenantConfig(method="uniform")
+    res = multitenant.solve_multitenant(tasks, hw, objective="edp",
+                                        cfg=cfg)
+    assert res.objective <= res.baseline["edp"]
+    assert res.objective == res.edp == res.energy * res.latency
+    assert len(res.assignment) == len(res.partitions) == 2
+    assert res.latency == max(d["latency"] for d in res.per_tenant)
+    assert res.energy == sum(d["energy"] for d in res.per_tenant)
+    assert all(d["slowdown"] >= 1.0 for d in res.per_tenant)
+    # scores are JSON-clean host floats (artifact contract)
+    for d in (*res.per_tenant, res.baseline):
+        for k, v in d.items():
+            if k != "assignment":
+                assert type(v) is float, (k, type(v))
+    # asymmetric hetero grid: the search should strictly beat even split
+    assert res.objective < res.baseline["edp"]
+    assert res.assignment != res.baseline["assignment"]
+
+
+def test_solve_multitenant_with_ga_inner_engine():
+    """The solver branch of _solve_tenants: every tenant region is
+    searched through sweep.solve_grid and decoded by the shared
+    _decode_schedule path."""
+    tasks = [toy_task(2, 256, "ga_a"), toy_task(2, 512, "ga_b")]
+    cfg = MultiTenantConfig(
+        method="ga", cfg=GAConfig(population=16, generations=4,
+                                  patience=2, seed=0))
+    res = multitenant.solve_multitenant(tasks, two_class_hw(),
+                                        objective="edp", cfg=cfg)
+    assert res.objective <= res.baseline["edp"]
+    assert res.evaluations > 0
+    for part, (x0, x1) in zip(res.partitions, res.assignment):
+        assert part.Px.shape[1] == (x1 - x0)  # searched inside the band
+
+
+def test_multitenant_sweep_caches_bitwise():
+    pts = [sweep.MultiTenantPoint(
+        (toy_task(2, 256), toy_task(2, 512)), two_class_hw())]
+    cfg = MultiTenantConfig(method="uniform")
+    r1, = sweep.multitenant_sweep(pts, cfg=cfg)
+    before = sweep.cache_stats()
+    r2, = sweep.multitenant_sweep(pts, cfg=cfg)
+    after = sweep.cache_stats()
+    assert after["hits"] > before["hits"]
+    assert r1.objective == r2.objective
+    assert r1.assignment == r2.assignment
+    r2.baseline["edp"] = -1.0  # returned records are copies
+    r3, = sweep.multitenant_sweep(pts, cfg=cfg)
+    assert r3.baseline["edp"] == r1.baseline["edp"]
+
+
+def test_solve_grid_routes_multitenant():
+    pts = [sweep.MultiTenantPoint(
+        (toy_task(2, 256),), HWConfig(X=2))]
+    rec, = sweep.solve_grid(pts, objective="edp",
+                            cfg=MultiTenantConfig(method="uniform"),
+                            method="multitenant")
+    assert isinstance(rec, multitenant.MultiTenantResult)
+
+
+def test_solve_multitenant_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="objective"):
+        multitenant.solve_multitenant([toy_task(2)], HWConfig(),
+                                      objective="speed")
+    with pytest.raises(ValueError, match="at least one"):
+        multitenant.solve_multitenant([], HWConfig())
+    with pytest.raises(ValueError, match="row"):
+        multitenant.solve_multitenant([toy_task(2)] * 5, HWConfig())
+    with pytest.raises(ValueError, match="unknown tenant method"):
+        MultiTenantConfig(method="annealing")
+
+
+# --------------------------------------------------- serve-layer firewall
+def _mt_request(pt, **kw):
+    kw.setdefault("cfg", MultiTenantConfig(method="uniform"))
+    return OptRequest(kind="solve", method="multitenant", point=pt,
+                      objective="edp", **kw)
+
+
+def test_firewall_accepts_valid_multitenant_request():
+    pt = sweep.MultiTenantPoint(
+        (toy_task(2, 256), toy_task(2, 512)), two_class_hw())
+    req = _mt_request(pt)
+    req.validate()
+    sig = req.shape_signature()
+    assert sig[1] == "multitenant" and sig[2] == (2, 2)
+
+
+def test_firewall_rejects_corrupted_hetero_fields():
+    """Unpickling bypasses __post_init__ — the firewall must re-run the
+    field validation on request ingress."""
+    pt = sweep.MultiTenantPoint((toy_task(2),), two_class_hw())
+    bad_hw = pickle.loads(pickle.dumps(pt.hw))
+    object.__setattr__(bad_hw, "class_assignment", (0,) * 5)
+    bad_pt = sweep.MultiTenantPoint(pt.tasks, bad_hw)
+    with pytest.raises(BadRequest, match="X\\*Y=16"):
+        _mt_request(bad_pt).validate()
+    object.__setattr__(bad_hw, "class_assignment", (0,) * 16)
+    object.__setattr__(bad_hw, "bw_nop", -5.0)
+    with pytest.raises(BadRequest, match="finite positive"):
+        _mt_request(sweep.MultiTenantPoint(pt.tasks, bad_hw)).validate()
+
+
+def test_firewall_rejects_malformed_multitenant_points():
+    hw = HWConfig()
+    with pytest.raises(BadRequest, match="MultiTenantPoint"):
+        _mt_request(sweep.EvalPoint(toy_task(2), hw)).validate()
+    with pytest.raises(BadRequest, match="non-empty"):
+        _mt_request(sweep.MultiTenantPoint((), hw)).validate()
+    with pytest.raises(BadRequest, match="Task"):
+        _mt_request(
+            sweep.MultiTenantPoint(("not-a-task",), hw)).validate()
+    with pytest.raises(BadRequest, match="row"):
+        _mt_request(sweep.MultiTenantPoint(
+            tuple(toy_task(2, name=f"t{i}") for i in range(5)),
+            hw)).validate()
+    with pytest.raises(BadRequest, match="cfg"):
+        _mt_request(sweep.MultiTenantPoint((toy_task(2),), hw),
+                    cfg=GAConfig()).validate()
+
+
+def test_eval_firewall_also_checks_hw():
+    hw = pickle.loads(pickle.dumps(two_class_hw()))
+    object.__setattr__(hw, "chiplet_classes", ())
+    req = OptRequest(kind="eval", point=sweep.EvalPoint(toy_task(2), hw),
+                     backend="numpy")
+    with pytest.raises(BadRequest, match="invalid hardware config"):
+        req.validate()
